@@ -1,0 +1,92 @@
+"""Shared benchmark scaffolding: builds paper-protocol simulators at a scale
+that runs on this CPU container, with one switch (--full) stepping toward the
+paper's full 100-client / G=30 / L=10 setting.
+
+Emits ``name,us_per_call,derived`` CSV rows (harness contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs import FLConfig, OptimizerConfig, get_config
+from repro.data import (client_datasets_images, client_datasets_lm,
+                        lm_examples, make_char_data, make_image_data)
+from repro.fl import FLSimulator
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@dataclasses.dataclass
+class Scale:
+    num_clients: int = 20
+    clients_per_round: int = 12
+    num_shards: int = 4
+    local_epochs: int = 4
+    global_rounds: int = 6
+    samples_per_client: int = 80
+    image_size: int = 14
+    seq_len: int = 48
+    test_n: int = 400
+
+    @classmethod
+    def full(cls):
+        return cls(num_clients=100, clients_per_round=20, num_shards=4,
+                   local_epochs=10, global_rounds=30, samples_per_client=100,
+                   image_size=28, seq_len=64, test_n=1000)
+
+
+def fl_config(sc: Scale) -> FLConfig:
+    return FLConfig(num_clients=sc.num_clients,
+                    clients_per_round=sc.clients_per_round,
+                    num_shards=sc.num_shards,
+                    local_epochs=sc.local_epochs,
+                    global_rounds=sc.global_rounds,
+                    retrain_ratio=2.0)
+
+
+def build_image_sim(sc: Scale, iid: bool, seed: int = 0,
+                    store: str = "coded"):
+    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=sc.image_size,
+                              d_model=48, cnn_channels=(8, 16))
+    data = make_image_data(sc.num_clients * sc.samples_per_client,
+                           image_size=sc.image_size, seed=seed, noise=0.25)
+    clients = client_datasets_images(data, sc.num_clients, iid=iid, seed=seed)
+    sim = FLSimulator(cfg, fl_config(sc), clients, task="image",
+                      opt_cfg=OptimizerConfig(name="sgd", lr=0.05, grad_clip=0.0),
+                      local_batch=20, seed=seed)
+    test = make_image_data(sc.test_n, image_size=sc.image_size, seed=seed + 999,
+                           noise=0.25)
+    return sim, (test.images, test.labels)
+
+
+def build_lm_sim(sc: Scale, iid: bool, seed: int = 0):
+    cfg = get_config("nanogpt-paper")
+    stream = make_char_data(sc.num_clients * sc.samples_per_client * sc.seq_len
+                            + sc.seq_len + 1, vocab_size=cfg.vocab_size,
+                            seed=seed)
+    toks, labs = lm_examples(stream, sc.seq_len)
+    clients = client_datasets_lm(toks, labs, sc.num_clients, iid=iid, seed=seed)
+    sim = FLSimulator(cfg, fl_config(sc), clients, task="lm",
+                      opt_cfg=OptimizerConfig(name="sgd", lr=0.3, grad_clip=0.0),
+                      local_batch=10, seed=seed)
+    test_stream = make_char_data(sc.test_n * sc.seq_len + 1,
+                                 vocab_size=cfg.vocab_size, seed=seed + 999)
+    tt, tl = lm_examples(test_stream, sc.seq_len)
+    return sim, (tt, tl)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

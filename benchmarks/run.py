@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (fig3_single_request, fig4_concurrent, fig5_storage,
+                            kernels_bench, table1_f1_time, theory_check)
+    from benchmarks.common import Scale, emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,fig5,table1,theory,kernels")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (100 clients, G=30, L=10) — slow on CPU")
+    ap.add_argument("--fast", action="store_true",
+                    help="minimal scale for CI")
+    args = ap.parse_args(argv)
+
+    sc = Scale.full() if args.full else Scale()
+    if args.fast:
+        sc = Scale(num_clients=8, clients_per_round=8, num_shards=2,
+                   local_epochs=2, global_rounds=2, samples_per_client=40,
+                   image_size=12, seq_len=32, test_n=120)
+
+    suites = {
+        "theory": theory_check.run,
+        "kernels": kernels_bench.run,
+        "fig3": fig3_single_request.run,
+        "fig4": fig4_concurrent.run,
+        "fig5": fig5_storage.run,
+        "table1": table1_f1_time.run,
+    }
+    only = args.only.split(",") if args.only else list(suites)
+    t0 = time.time()
+    for name in only:
+        print(f"# --- {name} ---", flush=True)
+        suites[name](sc)
+    emit("bench_total_wall", (time.time() - t0) * 1e6, f"suites={len(only)}")
+
+
+if __name__ == "__main__":
+    main()

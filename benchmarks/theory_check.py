@@ -1,0 +1,30 @@
+"""Sec 4 theory validation: eq. (9)/(10) closed forms vs Monte-Carlo, and the
+eq. (12)/(13) storage-efficiency / throughput table."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import theory
+
+
+def run(_sc=None):
+    ct = 1.0
+    for s in (2, 4, 8):
+        for k in (1, 4, 16):
+            seq_a = theory.sequential_time(s, k, ct)
+            seq_m = theory.mc_sequential_time(s, k, ct)
+            con_a = theory.concurrent_time(s, k, ct)
+            con_m = theory.mc_concurrent_time(s, k, ct)
+            emit(f"theory_S{s}_K{k}", 0.0,
+                 f"eq9={seq_a:.3f};mc={seq_m:.3f};"
+                 f"eq10={con_a:.3f};mc10={con_m:.3f};"
+                 f"err={abs(con_a - con_m) / con_a:.3%}")
+    for c, s, mu in ((100, 4, 0.1), (100, 8, 0.2), (1000, 16, 0.1)):
+        lo, hi = theory.storage_efficiency_bounds(c, s, mu)
+        emit(f"theory_eq12_C{c}_S{s}_mu{mu}", 0.0,
+             f"gamma_lo={lo:.0f};gamma_hi={hi:.0f}")
+        emit(f"theory_eq13_C{c}_S{s}", 0.0,
+             f"lambda_c={theory.coded_throughput(c, s):.3e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Coded computing walkthrough (paper Sec 3.3): Lagrange-encode a round of
+per-shard parameters into client slices, then reconstruct under (a) full
+availability, (b) erasures (clients offline), (c) Byzantine corruption —
+showing the eq. (11) tolerance in action. Uses the Pallas coded_matmul kernel
+(interpret mode on CPU).
+
+    PYTHONPATH=src python examples/coded_storage.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding
+
+
+def main():
+    C, S, P = 24, 4, 100_000
+    scheme = coding.CodingScheme(num_shards=S, num_clients=C)
+    rng = np.random.default_rng(0)
+    shard_params = jnp.asarray(rng.standard_normal((S, P)), jnp.float32)
+
+    print(f"== encode: S={S} shard vectors -> C={C} coded client slices ==")
+    slices = coding.encode(scheme, shard_params, use_kernel=True)
+    print(f"   slice matrix: {slices.shape}, "
+          f"server stores only the {C} interpolation keys")
+    print(f"   error tolerance (eq. 11): up to {scheme.max_errors} "
+          f"corrupted slices")
+
+    print("== (a) decode from any S slices ==")
+    ids = [1, 7, 13, 22]
+    rec = coding.decode_erasure(scheme, slices[jnp.asarray(ids)], ids,
+                                use_kernel=True)
+    print(f"   max |error| = {float(jnp.abs(rec - shard_params).max()):.2e}")
+
+    print(f"== (b) erasures: only 6 of {C} clients reachable ==")
+    avail = [0, 4, 9, 15, 18, 23]
+    rec = coding.decode_erasure(scheme, slices[jnp.asarray(avail)], avail)
+    print(f"   max |error| = {float(jnp.abs(rec - shard_params).max()):.2e}")
+
+    print("== (c) corruption: 3 Byzantine clients send garbage ==")
+    bad = [2, 11, 19]
+    corrupted = np.array(slices)
+    corrupted[bad] += rng.standard_normal((len(bad), P)) * 10
+    rec, located = coding.decode_with_errors(scheme, jnp.asarray(corrupted))
+    print(f"   Berlekamp-Welch located bad clients: {located.tolist()} "
+          f"(truth: {bad})")
+    print(f"   max |error| = {float(jnp.abs(rec - shard_params).max()):.2e}")
+
+
+if __name__ == "__main__":
+    main()

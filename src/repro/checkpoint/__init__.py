@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (CodedStore, FullStore, StoreStats,  # noqa: F401
+                                    UncodedShardStore, tree_bytes)

@@ -1,0 +1,156 @@
+"""Intermediate-parameter stores — the storage substrate the paper optimizes.
+
+``FullStore``      — FedEraser: central server keeps every participating
+                     client's parameters for every round.
+``UncodedShardStore`` — isolated sharding: each shard's server keeps only its
+                     own clients' parameters (still uncoded).
+``CodedStore``     — coded sharding: per round, the S shard-stacked parameter
+                     vectors are Lagrange-encoded into C slices that live on
+                     clients; the servers keep only the coding keys. Retrieval
+                     reconstructs with any >=S intact slices and tolerates up
+                     to (C-S)/2 corrupted ones.
+
+Every store reports byte-level accounting so the Fig. 5 benchmark can compare
+storage overhead and (modelled) communication time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+@dataclass
+class StoreStats:
+    server_bytes: int = 0
+    client_bytes: int = 0
+    encode_flops: int = 0
+    decode_flops: int = 0
+    comm_bytes_store: int = 0     # bytes moved client->server (or client<->client)
+    comm_bytes_retrieve: int = 0
+
+
+class FullStore:
+    """{(round, client_id): params} on the central server."""
+
+    def __init__(self):
+        self._data: Dict[Tuple[int, int], object] = {}
+        self.stats = StoreStats()
+
+    def put_round(self, rnd: int, client_params: Dict[int, object]):
+        for c, p in client_params.items():
+            self._data[(rnd, c)] = p
+            b = tree_bytes(p)
+            self.stats.server_bytes += b
+            self.stats.comm_bytes_store += b
+
+    def get(self, rnd: int, client: int):
+        p = self._data[(rnd, client)]
+        self.stats.comm_bytes_retrieve += tree_bytes(p)
+        return p
+
+    def clients_at(self, rnd: int) -> List[int]:
+        return sorted(c for (r, c) in self._data if r == rnd)
+
+
+class UncodedShardStore(FullStore):
+    """Same layout, but bytes are attributed per shard server (the shard's
+    server only holds its own clients — server_bytes tracks the max shard)."""
+
+    def __init__(self, shard_of: Dict[int, int]):
+        super().__init__()
+        self.shard_of = shard_of
+        self._per_shard: Dict[int, int] = {}
+
+    def put_round(self, rnd: int, client_params: Dict[int, object]):
+        for c, p in client_params.items():
+            self._data[(rnd, c)] = p
+            b = tree_bytes(p)
+            s = self.shard_of.get(c, 0)
+            self._per_shard[s] = self._per_shard.get(s, 0) + b
+            self.stats.comm_bytes_store += b
+        self.stats.server_bytes = max(self._per_shard.values(), default=0)
+
+
+class CodedStore:
+    """Lagrange-coded distributed store (paper Sec 3.3).
+
+    Per (round): the S shard parameter vectors (concat of their clients'
+    params) are encoded to C slices held by clients. The server side keeps
+    only the CodingScheme (keys). Decode returns {client_id: params} for one
+    shard.
+    """
+
+    def __init__(self, scheme: coding.CodingScheme,
+                 shard_clients: Dict[int, List[int]], use_kernel: bool = False):
+        self.scheme = scheme
+        self.shard_clients = {s: list(cs) for s, cs in shard_clients.items()}
+        self.use_kernel = use_kernel
+        self._slices: Dict[int, jnp.ndarray] = {}    # round -> (C, P)
+        self._specs: Dict[int, tuple] = {}
+        self._layouts: Dict[int, list] = {}          # round -> client order per shard
+        self.stats = StoreStats()
+        self.stats.server_bytes = 16 * scheme.num_clients  # the keys
+
+    def put_round(self, rnd: int, client_params: Dict[int, object]):
+        """Encode this round's per-shard parameter sets into client slices."""
+        shard_trees = []
+        layout = []
+        for s in sorted(self.shard_clients):
+            cs = [c for c in self.shard_clients[s] if c in client_params]
+            layout.append((s, cs))
+            shard_trees.append({c: client_params[c] for c in cs})
+        slices, specs = coding.encode_pytrees(self.scheme, shard_trees,
+                                              use_kernel=self.use_kernel)
+        self._slices[rnd] = slices
+        self._specs[rnd] = specs
+        self._layouts[rnd] = layout
+        p = slices.shape[1]
+        self.stats.client_bytes += int(slices.size * slices.dtype.itemsize)
+        # distribution traffic: every client receives its slice
+        self.stats.comm_bytes_store += int(slices.size * slices.dtype.itemsize)
+        s_dim = self.scheme.num_shards
+        self.stats.encode_flops += 2 * self.scheme.num_clients * s_dim * p
+
+    def get_shard(self, rnd: int, shard: int,
+                  available: Optional[Sequence[int]] = None,
+                  corrupt: Optional[np.ndarray] = None) -> Dict[int, object]:
+        """Reconstruct shard ``shard``'s stored params at round ``rnd``.
+
+        ``available``: client ids whose slices are reachable (default: all).
+        ``corrupt``: optional (C,P)-shaped noise to model erroneous slices —
+        triggers the error-correcting decode path.
+        """
+        slices = self._slices[rnd]
+        c = self.scheme.num_clients
+        if corrupt is not None:
+            slices = slices + jnp.asarray(corrupt, slices.dtype)
+            w, bad = coding.decode_with_errors(self.scheme, slices,
+                                               use_kernel=self.use_kernel)
+        else:
+            ids = list(available) if available is not None else list(range(c))
+            w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)], ids,
+                                      use_kernel=self.use_kernel)
+        self.stats.comm_bytes_retrieve += int(
+            self.scheme.num_shards * slices.shape[1] * 4)
+        self.stats.decode_flops += 2 * self.scheme.num_shards ** 2 * slices.shape[1]
+        # reassemble the requested shard's {client: tree}
+        layout = self._layouts[rnd]
+        specs = self._specs[rnd]
+        for idx, (s, cs) in enumerate(layout):
+            if s == shard:
+                tree = coding.flat_to_tree(w[idx], specs[idx])
+                return tree
+        raise KeyError(f"shard {shard} not stored at round {rnd}")
+
+    def clients_at(self, rnd: int) -> List[int]:
+        return sorted(c for _, cs in self._layouts[rnd] for c in cs)

@@ -1,0 +1,2 @@
+from repro.core import coding, sharding, theory, unlearning  # noqa: F401
+from repro.core.baselines import FRAMEWORKS, Framework  # noqa: F401

@@ -1,0 +1,280 @@
+"""Coded computing-based sharding (paper Sec 3.3).
+
+The per-round, per-shard intermediate parameters ``w_{C_s}^g`` (one vector per
+shard, stacked to ``W in R^{S x P}``) are Lagrange-encoded (eq. 5/6) at client
+points ``alpha_i``:
+
+    w~_i = u(alpha_i) = sum_s W[s] * l_s(alpha_i)        (a C x S matmul)
+
+which is a Reed-Solomon code of dimension S and length C. Reconstruction:
+
+  * erasure decode (eq. 7): any S intact slices determine W. We solve it in
+    the *Lagrange basis* (re-interpolation matrix D[s,i] = l_i^{(I)}(omega_s))
+    rather than inverting the power-basis Vandermonde — numerically stable at
+    C=100 in float32. The paper's literal pseudo-inverse form is also provided
+    (``decode_vandermonde``) for fidelity tests at small C.
+  * error decode: up to floor((C-S)/2) corrupted slices are localized with
+    Berlekamp-Welch (float64 least squares on a sample of coordinates,
+    majority vote), then excluded and erasure-decoded. Matches the paper's
+    ``2*mu*C <= C - S`` tolerance (eq. 11).
+
+Encode/decode are *matmuls against small coefficient matrices*, so on TPU they
+stream parameter blocks through the MXU — see kernels/coded_matmul for the
+Pallas fast path; this module is the reference/driver layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def chebyshev_points(n: int, lo: float = -1.0, hi: float = 1.0) -> np.ndarray:
+    """Chebyshev nodes — well-conditioned interpolation points."""
+    k = np.arange(n)
+    x = np.cos((2 * k + 1) / (2 * n) * np.pi)
+    return (lo + hi) / 2 + (hi - lo) / 2 * x
+
+
+def lagrange_coeff_matrix(src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """M[j, i] = l_i^{(src)}(dst_j): evaluate the Lagrange basis over ``src``
+    points at ``dst`` points. Encode: src=omega, dst=alpha. Decode: src=alpha
+    subset, dst=omega."""
+    src = np.asarray(src, np.float64)
+    dst = np.asarray(dst, np.float64)
+    n = len(src)
+    m = np.ones((len(dst), n), np.float64)
+    for i in range(n):
+        for j in range(n):
+            if j != i:
+                m[:, i] *= (dst - src[j]) / (src[i] - src[j])
+    return m
+
+
+@dataclass(frozen=True)
+class CodingScheme:
+    """Evaluation-point layout for one (C clients, S shards) code."""
+    num_shards: int                  # S — code dimension
+    num_clients: int                 # C — code length
+    alpha: np.ndarray = field(default=None)   # (C,) client points
+    omega: np.ndarray = field(default=None)   # (S,) shard points
+
+    def __post_init__(self):
+        assert self.num_clients >= self.num_shards, "need C >= S"
+        if self.alpha is None:
+            object.__setattr__(self, "alpha",
+                               chebyshev_points(self.num_clients, -1.0, 1.0))
+        if self.omega is None:
+            # interleave shard points strictly inside the alpha hull
+            object.__setattr__(self, "omega",
+                               chebyshev_points(self.num_shards, -0.95, 0.95))
+
+    # -- matrices ----------------------------------------------------------
+    def encode_matrix(self) -> np.ndarray:
+        """(C, S): B[i, s] = l_s(alpha_i). eq. (6)."""
+        return lagrange_coeff_matrix(self.omega, self.alpha)
+
+    def decode_matrix(self, client_ids: Sequence[int]) -> np.ndarray:
+        """(S, S): re-interpolation from a slice subset back to omega.
+
+        When more than S slices are available we pick a well-spread subset
+        (greedy farthest-point on the alpha line) — interpolation conditioning
+        depends on node spread, and the first-S ids may cluster at one end of
+        the Chebyshev layout."""
+        ids = np.asarray(client_ids)
+        assert len(ids) >= self.num_shards, "need at least S slices"
+        if len(ids) > self.num_shards:
+            pts = self.alpha[ids]
+            chosen = [int(np.argmin(pts)), int(np.argmax(pts))]
+            while len(chosen) < self.num_shards:
+                dmin = np.min(np.abs(pts[:, None] - pts[chosen][None, :]), axis=1)
+                dmin[chosen] = -1
+                chosen.append(int(np.argmax(dmin)))
+            ids = ids[np.sort(chosen)]
+        return lagrange_coeff_matrix(self.alpha[ids], self.omega), ids
+
+    @property
+    def max_errors(self) -> int:
+        """mu*C with 2*mu*C <= C - S (eq. 11)."""
+        return (self.num_clients - self.num_shards) // 2
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode on (stacked) parameter matrices
+# ---------------------------------------------------------------------------
+
+def encode(scheme: CodingScheme, shard_params: jnp.ndarray,
+           use_kernel: bool = False) -> jnp.ndarray:
+    """shard_params: (S, P) -> coded slices (C, P). eq. (6)."""
+    b = jnp.asarray(scheme.encode_matrix(), jnp.float32)
+    w = shard_params.astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.coded_matmul.ops import coded_matmul
+        return coded_matmul(b, w)
+    return b @ w
+
+
+def decode_erasure(scheme: CodingScheme, slices: jnp.ndarray,
+                   client_ids: Sequence[int],
+                   use_kernel: bool = False) -> jnp.ndarray:
+    """Reconstruct (S, P) from >=S intact slices (rows of ``slices``).
+
+    slices: (len(client_ids), P) — coded slices from those clients.
+    """
+    d, ids = scheme.decode_matrix(client_ids)
+    dm = jnp.asarray(d, jnp.float32)
+    rows = jnp.asarray([list(client_ids).index(int(i)) for i in ids])
+    sl = slices[rows].astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.coded_matmul.ops import coded_matmul
+        return coded_matmul(dm, sl)
+    return dm @ sl
+
+
+def decode_vandermonde(scheme: CodingScheme, slices: jnp.ndarray) -> jnp.ndarray:
+    """The paper's literal eq. (7): power-basis Vandermonde pseudo-inverse.
+
+    Reconstructs the polynomial coefficients then evaluates at omega. Only
+    numerically sane for small C; kept for fidelity testing.
+    """
+    a = np.vander(np.asarray(scheme.alpha), scheme.num_shards, increasing=True)
+    pinv = np.linalg.pinv(a)                        # (S, C)
+    coeffs = jnp.asarray(pinv, jnp.float32) @ slices.astype(jnp.float32)
+    v_omega = np.vander(np.asarray(scheme.omega), scheme.num_shards,
+                        increasing=True)            # (S, S)
+    return jnp.asarray(v_omega, jnp.float32) @ coeffs
+
+
+# ---------------------------------------------------------------------------
+# Berlekamp-Welch error localization (float64, control-plane)
+# ---------------------------------------------------------------------------
+
+def _consistency_residual(scheme: CodingScheme, slices: np.ndarray,
+                          trusted: np.ndarray) -> np.ndarray:
+    """Decode from ``trusted[:S]`` rows, re-encode, return per-row residual."""
+    d, ids = scheme.decode_matrix(list(trusted))
+    rows = [list(trusted).index(int(i)) for i in ids]
+    w = d @ slices[trusted[rows]]
+    b = scheme.encode_matrix()
+    recon = b @ w
+    denom = np.abs(slices).mean() + 1e-12
+    return np.abs(recon - slices).mean(axis=1) / denom
+
+
+def locate_errors(scheme: CodingScheme, slices: np.ndarray,
+                  num_probe: int = 8, seed: int = 0, tol: float = 1e-3,
+                  method: str = "bw") -> np.ndarray:
+    """Identify corrupted slice rows. slices: (C, P) float array.
+
+    method="bw": Berlekamp-Welch — solve Q(a_i) = y_i E(a_i) (deg Q < S+e,
+    E monic deg e) by float64 least squares on ``num_probe`` coordinates; the
+    roots of E (|E(a_i)| ~ 0) are the corrupted clients; majority vote.
+    method="ransac": consensus decoding — sample S-subsets, re-encode, pick
+    the largest inlier set (robust production fallback at large C).
+    A consistency pre-check short-circuits the no-error case.
+    """
+    slices = np.asarray(slices, np.float64)
+    c, p = slices.shape
+    s = scheme.num_shards
+    e = scheme.max_errors
+    if e == 0:
+        return np.array([], np.int64)
+    # fast path: no errors at all
+    resid0 = _consistency_residual(scheme, slices, np.arange(c))
+    if resid0.max() < tol:
+        return np.array([], np.int64)
+    a = np.asarray(scheme.alpha, np.float64)
+    rng = np.random.default_rng(seed)
+
+    if method == "ransac":
+        best_bad, best_inliers = None, -1
+        for _ in range(128):
+            pick = rng.choice(c, size=s, replace=False)
+            r = _consistency_residual(scheme, slices, pick)
+            inliers = int((r < tol).sum())
+            if inliers > best_inliers:
+                best_inliers = inliers
+                best_bad = np.where(r >= tol)[0]
+            if inliers >= c - e:
+                break
+        return np.sort(best_bad)
+
+    cols = rng.choice(p, size=min(num_probe, p), replace=False)
+    votes = np.zeros(c)
+    va_q = np.vander(a, s + e, increasing=True)          # Q: deg < S+e
+    va_e = np.vander(a, e, increasing=True)              # E: monic deg e
+    for col in cols:
+        y = slices[:, col]
+        # Q(a_i) - y_i*(E_0 + ... + E_{e-1} a^{e-1}) = y_i * a^e
+        lhs = np.concatenate([va_q, -y[:, None] * va_e], axis=1)
+        rhs = y * a ** e
+        sol, *_ = np.linalg.lstsq(lhs, rhs, rcond=None)
+        e_coeffs = np.concatenate([sol[s + e:], [1.0]])  # monic
+        e_vals = np.abs(np.polyval(e_coeffs[::-1], a))
+        votes += e_vals < 0.05 * np.median(e_vals + 1e-300)
+    bad = np.sort(np.where(votes > len(cols) / 2)[0])
+    # verify: decoding without the located rows must be self-consistent
+    good = np.setdiff1d(np.arange(c), bad)
+    if len(good) >= s:
+        r = _consistency_residual(scheme, slices, good)
+        if np.median(r[good]) < tol:
+            return bad
+    # fall back to consensus decoding
+    return locate_errors(scheme, slices, num_probe, seed, tol, method="ransac")
+
+
+def decode_with_errors(scheme: CodingScheme, slices: jnp.ndarray,
+                       use_kernel: bool = False) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Full RS decode: localize corrupted slices, then erasure-decode without
+    them. slices: (C, P). Returns (W (S,P), bad_ids)."""
+    bad = locate_errors(scheme, np.asarray(slices, np.float64))
+    good = np.setdiff1d(np.arange(scheme.num_clients), bad)
+    assert len(good) >= scheme.num_shards, "too many corrupted slices"
+    w = decode_erasure(scheme, slices[jnp.asarray(good)], list(good),
+                       use_kernel=use_kernel)
+    return w, bad
+
+
+# ---------------------------------------------------------------------------
+# Pytree <-> flat parameter matrix
+# ---------------------------------------------------------------------------
+
+def tree_to_flat(tree) -> Tuple[jnp.ndarray, object]:
+    """Flatten a param pytree to a 1-D f32 vector + re-assembly spec."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes)
+
+
+def flat_to_tree(flat: jnp.ndarray, spec) -> object:
+    treedef, shapes = spec
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off: off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def encode_pytrees(scheme: CodingScheme, shard_trees: Sequence,
+                   use_kernel: bool = False):
+    """Encode S parameter pytrees (one per shard) into C coded slices.
+
+    Returns (slices (C, P), spec) — spec reassembles decoded rows to pytrees.
+    """
+    flats, specs = zip(*[tree_to_flat(t) for t in shard_trees])
+    pmax = max(f.shape[0] for f in flats)
+    w = jnp.stack([jnp.pad(f, (0, pmax - f.shape[0])) for f in flats])
+    return encode(scheme, w, use_kernel=use_kernel), specs
+
+
+def decode_pytrees(scheme: CodingScheme, slices: jnp.ndarray,
+                   client_ids: Sequence[int], specs,
+                   use_kernel: bool = False):
+    w = decode_erasure(scheme, slices, client_ids, use_kernel=use_kernel)
+    return [flat_to_tree(w[s], specs[s]) for s in range(scheme.num_shards)]

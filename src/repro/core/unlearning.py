@@ -1,0 +1,72 @@
+"""SE (Sharding Eraser) unlearning engine: preparation (eq. 2) and calibrated
+retraining (eq. 3), operating on parameter pytrees.
+
+These are the *algebraic* operations; the FL loop that drives them lives in
+``repro.fl.simulator`` (CPU paper-scale) and ``repro.fl.fedavg`` (pod-scale).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_mean(trees: Sequence):
+    """Average a list of pytrees — eq. (2)'s aggregation."""
+    n = float(len(trees))
+    return jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
+                        *trees)
+
+
+def tree_add(a, b, scale: float = 1.0):
+    return jax.tree.map(lambda x, y: x + scale * y.astype(x.dtype), a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y.astype(x.dtype), a, b)
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    """Global L2 norm of a pytree (f32 accumulate)."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), tree)
+
+
+def prepare_initial_model(retained_locals: Sequence) -> object:
+    """eq. (2): the initial unlearned global model is the average of the
+    retained clients' stored local models (the unlearned clients' parameters
+    have already been removed from the set)."""
+    assert retained_locals, "no retained clients in shard"
+    return tree_mean(retained_locals)
+
+
+def calibrate(global_model, retrained_deltas: Sequence,
+              stored_deltas: Sequence, eps: float = 1e-12):
+    """eq. (3): one calibrated-retraining aggregation round.
+
+        w^{g'+1} = w^{g'} + (1/M) * sum_m  (||w^g_m|| / ||w'^{g'}_m||) w'^{g'}_m
+
+    ``retrained_deltas``: the retained clients' *new* local updates at
+    unlearning round g' (trained with L/r epochs from the current unlearned
+    global model).  ``stored_deltas``: the same clients' *historical* updates
+    at the matching learning round g = g' — only their norms are used, to
+    restore the update magnitude the full training had.
+    """
+    assert len(retrained_deltas) == len(stored_deltas)
+    m = len(retrained_deltas)
+    out = global_model
+    for new, old in zip(retrained_deltas, stored_deltas):
+        ratio = tree_norm(old) / jnp.maximum(tree_norm(new), eps)
+        out = tree_add(out, tree_scale(new, ratio / m))
+    return out
+
+
+def remove_client_effect(all_locals: dict, unlearn_clients: Sequence[int]) -> dict:
+    """Preparation step: drop the unlearning clients' stored parameters from a
+    {client_id: pytree} mapping (w^g_{s_i} = w^g_{C_si} - w^g_{C'_si})."""
+    return {c: p for c, p in all_locals.items() if c not in set(unlearn_clients)}

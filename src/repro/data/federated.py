@@ -1,0 +1,76 @@
+"""Federated data partitioning (paper Sec 5.1).
+
+IID: random equal split across C clients.
+Non-IID (classification): 80% of each client's samples from one primary
+class, the rest uniform [Wang et al., 2020].
+Non-IID (language): the stream is cut into unbalanced buckets; each client
+gets two buckets.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import ImageData
+
+
+def partition_iid(n: int, num_clients: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return [np.sort(p) for p in np.array_split(perm, num_clients)]
+
+
+def partition_noniid_classes(labels: np.ndarray, num_clients: int,
+                             primary_frac: float = 0.8,
+                             seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    n = len(labels)
+    num_classes = int(labels.max()) + 1
+    per_client = n // num_clients
+    by_class = {c: list(rng.permutation(np.where(labels == c)[0]))
+                for c in range(num_classes)}
+    rest_pool = list(rng.permutation(n))
+    out = []
+    for k in range(num_clients):
+        primary = k % num_classes
+        n_prim = int(per_client * primary_frac)
+        take = []
+        pool = by_class[primary]
+        take.extend(pool[:n_prim])
+        by_class[primary] = pool[n_prim:]
+        while len(take) < per_client and rest_pool:
+            cand = rest_pool.pop()
+            take.append(cand)
+        out.append(np.asarray(sorted(take[:per_client]), np.int64))
+    return out
+
+
+def partition_noniid_buckets(n_examples: int, num_clients: int,
+                             seed: int = 0) -> List[np.ndarray]:
+    """Unbalanced buckets; each client is assigned two buckets."""
+    rng = np.random.default_rng(seed)
+    n_buckets = num_clients * 2
+    # unbalanced bucket sizes via dirichlet
+    sizes = rng.dirichlet(np.full(n_buckets, 0.5)) * n_examples
+    sizes = np.maximum(sizes.astype(np.int64), 1)
+    edges = np.minimum(np.cumsum(sizes), n_examples)
+    buckets = np.split(np.arange(n_examples), edges[:-1])
+    order = rng.permutation(n_buckets)
+    return [np.concatenate([buckets[order[2 * k]], buckets[order[2 * k + 1]]])
+            for k in range(num_clients)]
+
+
+def client_datasets_images(data: ImageData, num_clients: int, iid: bool,
+                           seed: int = 0) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    parts = (partition_iid(len(data.labels), num_clients, seed) if iid
+             else partition_noniid_classes(data.labels, num_clients, seed=seed))
+    return {k: (data.images[idx], data.labels[idx]) for k, idx in enumerate(parts)}
+
+
+def client_datasets_lm(tokens: np.ndarray, labels: np.ndarray, num_clients: int,
+                       iid: bool, seed: int = 0) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    n = len(tokens)
+    parts = (partition_iid(n, num_clients, seed) if iid
+             else partition_noniid_buckets(n, num_clients, seed))
+    return {k: (tokens[idx], labels[idx]) for k, idx in enumerate(parts)}

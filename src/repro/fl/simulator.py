@@ -1,0 +1,319 @@
+"""CPU-scale federated learning + unlearning simulator (paper Sec 5).
+
+Runs the paper's experimental protocol end-to-end on the paper's own models
+(CNN classifier / NanoGPT): C clients, a sampled subset per stage split into S
+isolated shards, FedAvg within shards, intermediate-parameter storage
+(full / uncoded-shard / coded), and the four unlearning frameworks
+(FR / FE / RR / SE).
+
+Client local training is vmapped (clients in a shard train in parallel);
+everything is jitted once per (model, batch-shape).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (CodedStore, FullStore, StoreStats,
+                                    UncodedShardStore, tree_bytes)
+from repro.configs.base import FLConfig, ModelConfig, OptimizerConfig
+from repro.core import coding, unlearning
+from repro.core.sharding import ShardManager, StagePlan
+from repro.models import init_params, loss_fn, predict_fn
+from repro.optim import make_optimizer
+from repro.optim.fisher import diag_fisher, fisher_precondition
+
+
+@dataclass
+class StageRecord:
+    plan: StagePlan
+    shard_models: Dict[int, object]               # final per-shard globals
+    round_globals: Dict[int, List[object]]        # shard -> [w^g inputs], len G+1
+    store: object                                 # parameter store
+    history_norms: Dict[Tuple[int, int, int], float] = field(default_factory=dict)
+    # (shard, round, client) -> ||delta|| of the stored update
+
+
+@dataclass
+class UnlearnResult:
+    framework: str
+    models: Dict[int, object]        # shard -> unlearned model (single: {0: w})
+    wall_time: float
+    cost_units: float                # client-epochs of retraining
+    store_stats: Optional[StoreStats]
+    impacted_shards: Sequence[int]
+
+
+class FLSimulator:
+    def __init__(self, model_cfg: ModelConfig, fl_cfg: FLConfig,
+                 client_data: Dict[int, Tuple[np.ndarray, np.ndarray]],
+                 task: str, opt_cfg: Optional[OptimizerConfig] = None,
+                 local_batch: int = 20, seed: int = 0):
+        self.cfg = model_cfg
+        self.fl = fl_cfg
+        self.task = task                      # "image" | "lm"
+        self.opt = opt_cfg or OptimizerConfig(name="sgdm", lr=0.05, grad_clip=0.0)
+        self.client_data = client_data
+        self.local_batch = local_batch
+        self.seed = seed
+        self.mgr = ShardManager(fl_cfg.num_clients, fl_cfg.num_shards,
+                                fl_cfg.clients_per_round, seed)
+        self._lf = loss_fn(model_cfg)
+        self._pf = predict_fn(model_cfg)
+        self._build_steps()
+
+    # ------------------------------------------------------------------ jit
+    def _build_steps(self):
+        lf = self._lf
+        opt_init, opt_update = make_optimizer(self.opt)
+
+        def local_train(params, xs, ys, epochs, fisher=None):
+            """Minibatch-SGD local training. xs: (n, ...), ys: (n, ...)."""
+            bs = self.local_batch
+            n = xs.shape[0] // bs * bs
+            xb = xs[:n].reshape(-1, bs, *xs.shape[1:])
+            yb = ys[:n].reshape(-1, bs, *ys.shape[1:])
+            state = opt_init(params)
+
+            def epoch_body(carry, _):
+                params, state = carry
+
+                def batch_body(carry, xy):
+                    params, state = carry
+                    x, y = xy
+                    batch = self._make_batch(x, y)
+                    grads = jax.grad(lambda p: lf(p, batch)[0])(params)
+                    if fisher is not None:
+                        grads = fisher_precondition(grads, fisher)
+                    params, state = opt_update(params, grads, state)
+                    return (params, state), None
+
+                (params, state), _ = jax.lax.scan(batch_body, (params, state),
+                                                  (xb, yb))
+                return (params, state), None
+
+            (params, _), _ = jax.lax.scan(epoch_body, (params, state), None,
+                                          length=epochs)
+            return params
+
+        # vmap over clients: stacked data (M, n, ...), shared initial params
+        self._local_train = {}
+        for ep in set([self.fl.local_epochs,
+                       max(int(self.fl.local_epochs / self.fl.retrain_ratio), 1)]):
+            self._local_train[ep] = jax.jit(
+                jax.vmap(lambda p, x, y, e=ep: local_train(p, x, y, e),
+                         in_axes=(None, 0, 0)))
+            self._local_train[(ep, "fisher")] = jax.jit(
+                jax.vmap(lambda p, x, y, f, e=ep: local_train(p, x, y, e, f),
+                         in_axes=(None, 0, 0, None)))
+        self._grad_fn = jax.jit(jax.grad(lambda p, b: lf(p, b)[0]))
+
+    def _make_batch(self, x, y):
+        if self.task == "image":
+            return {"images": x, "labels": y}
+        return {"tokens": x, "labels": y}
+
+    def _stack_client_data(self, clients: Sequence[int]):
+        n_min = min(self.client_data[c][0].shape[0] for c in clients)
+        xs = np.stack([self.client_data[c][0][:n_min] for c in clients])
+        ys = np.stack([self.client_data[c][1][:n_min] for c in clients])
+        return jnp.asarray(xs), jnp.asarray(ys)
+
+    # ------------------------------------------------------------- training
+    def train_stage(self, store_kind: str = "coded",
+                    rounds: Optional[int] = None) -> StageRecord:
+        """One stage: sample clients, split into shards, G FedAvg rounds per
+        shard, storing intermediate params in the requested store."""
+        fl = self.fl
+        g_rounds = rounds or fl.global_rounds
+        plan = self.mgr.new_stage()
+        rng = jax.random.key(self.seed + plan.stage)
+        w0 = init_params(self.cfg, rng)
+
+        if store_kind == "full":
+            store = FullStore()
+        elif store_kind == "uncoded":
+            store = UncodedShardStore({c: s for s, cs in plan.shard_clients.items()
+                                       for c in cs})
+        else:
+            scheme = coding.CodingScheme(num_shards=fl.num_shards,
+                                         num_clients=fl.clients_per_round)
+            # map slice index -> the stage's participating clients
+            store = CodedStore(scheme, plan.shard_clients)
+
+        # round-major loop: all shards advance one round, then the round's
+        # parameters are stored together (the coded store encodes ACROSS the
+        # S shards — eq. 5/6 mixes one round's shard vectors).
+        ws = {s: w0 for s in plan.shard_clients}
+        data = {s: self._stack_client_data(cs)
+                for s, cs in plan.shard_clients.items()}
+        round_globals = {s: [] for s in plan.shard_clients}
+        norms = {}
+        for g in range(g_rounds):
+            all_params = {}
+            for s, clients in plan.shard_clients.items():
+                round_globals[s].append(ws[s])
+                xs, ys = data[s]
+                locals_ = self._local_train[fl.local_epochs](ws[s], xs, ys)
+                per_client = [jax.tree.map(lambda a, i=i: a[i], locals_)
+                              for i in range(len(clients))]
+                all_params.update(dict(zip(clients, per_client)))
+                for i, c in enumerate(clients):
+                    d = unlearning.tree_sub(per_client[i], ws[s])
+                    norms[(s, g, c)] = float(unlearning.tree_norm(d))
+                ws[s] = unlearning.tree_mean(per_client)
+            store.put_round(g, all_params)
+        for s in plan.shard_clients:
+            round_globals[s].append(ws[s])
+        return StageRecord(plan, dict(ws), round_globals, store,
+                           history_norms=norms)
+
+    # ----------------------------------------------------------- unlearning
+    def unlearn(self, framework: str, record: StageRecord,
+                requests: Sequence[int], rounds: Optional[int] = None,
+                available: Optional[Sequence[int]] = None,
+                corrupt: Optional[np.ndarray] = None) -> UnlearnResult:
+        fl = self.fl
+        g_rounds = rounds or fl.global_rounds
+        plan = record.plan
+        t0 = time.perf_counter()
+        cost = 0.0
+        impacted = sorted(self.mgr.impacted_shards(plan, requests))
+        retrain_ep = max(int(fl.local_epochs / fl.retrain_ratio), 1)
+
+        if framework in ("SE", "SE-uncoded"):
+            models = dict(record.shard_models)
+            for s in impacted:
+                retained = self.mgr.retained(plan, s, requests)
+                if not retained:
+                    continue
+                xs, ys = self._stack_client_data(retained)
+                # preparation: reconstruct stored round-0 locals, eq (2)
+                stored0 = self._stored_round(record, s, 0, available, corrupt)
+                w = unlearning.prepare_initial_model(
+                    [stored0[c] for c in retained])
+                # calibrated retraining, eq (3)
+                for g in range(min(g_rounds, len(record.round_globals[s]) - 1)):
+                    locals_ = self._local_train[retrain_ep](w, xs, ys)
+                    new_deltas = [unlearning.tree_sub(
+                        jax.tree.map(lambda a, i=i: a[i], locals_), w)
+                        for i in range(len(retained))]
+                    stored_norms = [record.history_norms[(s, g, c)]
+                                    for c in retained]
+                    w = self._calibrate_with_norms(w, new_deltas, stored_norms)
+                    cost += len(retained) * retrain_ep
+                models[s] = w
+            result_models = models
+
+        elif framework == "FE":
+            # FedEraser without sharding: calibrate over ALL retained clients
+            retained = [c for c in plan.clients if c not in set(requests)]
+            xs, ys = self._stack_client_data(retained)
+            stored0 = self._all_stored_round(record, 0, available, corrupt)
+            w = unlearning.prepare_initial_model([stored0[c] for c in retained])
+            for g in range(g_rounds):
+                locals_ = self._local_train[retrain_ep](w, xs, ys)
+                new_deltas = [unlearning.tree_sub(
+                    jax.tree.map(lambda a, i=i: a[i], locals_), w)
+                    for i in range(len(retained))]
+                stored_norms = [record.history_norms[(plan.shard_of(c), g, c)]
+                                for c in retained]
+                w = self._calibrate_with_norms(w, new_deltas, stored_norms)
+                cost += len(retained) * retrain_ep
+            result_models = {0: w}
+
+        elif framework in ("FR", "RR"):
+            retained = [c for c in plan.clients if c not in set(requests)]
+            xs, ys = self._stack_client_data(retained)
+            w = init_params(self.cfg, jax.random.key(self.seed + 777))
+            fisher = None
+            ep = fl.local_epochs if framework == "FR" else retrain_ep
+            if framework == "RR":
+                # estimate the diagonal Fisher on retained data once
+                fisher = self._estimate_fisher(w, retained)
+            for g in range(g_rounds):
+                if framework == "RR":
+                    locals_ = self._local_train[(ep, "fisher")](w, xs, ys, fisher)
+                else:
+                    locals_ = self._local_train[ep](w, xs, ys)
+                per_client = [jax.tree.map(lambda a, i=i: a[i], locals_)
+                              for i in range(len(retained))]
+                w = unlearning.tree_mean(per_client)
+                cost += len(retained) * ep
+            result_models = {0: w}
+        else:
+            raise ValueError(framework)
+
+        jax.block_until_ready(jax.tree.leaves(list(result_models.values())[0])[0])
+        wall = time.perf_counter() - t0
+        stats = getattr(record.store, "stats", None)
+        return UnlearnResult(framework, result_models, wall, cost, stats, impacted)
+
+    # ------------------------------------------------------------- helpers
+    def _calibrate_with_norms(self, w, new_deltas, stored_norms):
+        m = len(new_deltas)
+        out = w
+        for nd, sn in zip(new_deltas, stored_norms):
+            ratio = sn / max(float(unlearning.tree_norm(nd)), 1e-12)
+            out = unlearning.tree_add(out, unlearning.tree_scale(nd, ratio / m))
+        return out
+
+    def _stored_round(self, record: StageRecord, shard: int, rnd: int,
+                      available=None, corrupt=None) -> Dict[int, object]:
+        store = record.store
+        if isinstance(store, CodedStore):
+            return store.get_shard(rnd, shard, available=available,
+                                   corrupt=corrupt)
+        return {c: store.get(rnd, c)
+                for c in record.plan.shard_clients[shard]}
+
+    def _all_stored_round(self, record: StageRecord, rnd: int,
+                          available=None, corrupt=None) -> Dict[int, object]:
+        out = {}
+        for s in record.plan.shard_clients:
+            out.update(self._stored_round(record, s, rnd, available, corrupt))
+        return out
+
+    def _estimate_fisher(self, params, clients: Sequence[int], n_batches: int = 4):
+        fisher = None
+        for i, c in enumerate(clients[:n_batches]):
+            x, y = self.client_data[c]
+            batch = self._make_batch(jnp.asarray(x[: self.local_batch]),
+                                     jnp.asarray(y[: self.local_batch]))
+            g = self._grad_fn(params, batch)
+            fisher = diag_fisher(fisher, g, i)
+        return fisher
+
+    # ------------------------------------------------------------- evaluate
+    def evaluate(self, models: Dict[int, object], xs: np.ndarray,
+                 ys: np.ndarray, batch: int = 200) -> Dict[str, float]:
+        """Ensemble evaluation: mean logits across shard models (SISA-style)."""
+        total, correct, loss_sum = 0, 0, 0.0
+        batch = min(batch, len(xs))
+        for i in range(0, len(xs) - batch + 1, batch):
+            x = jnp.asarray(xs[i:i + batch])
+            y = jnp.asarray(ys[i:i + batch])
+            b = self._make_batch(x, y)
+            logits = None
+            for m in models.values():
+                lg = self._pf(m, b)
+                logits = lg if logits is None else logits + lg
+            logits = logits / len(models)
+            if self.task == "image":
+                correct += int((logits.argmax(-1) == y).sum())
+                ll = jax.nn.log_softmax(logits.astype(jnp.float32))
+                loss_sum += float(-jnp.take_along_axis(
+                    ll, y[:, None], axis=-1).sum())
+                total += int(y.shape[0])
+            else:
+                ll = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                gold = jnp.take_along_axis(ll, y[..., None], axis=-1)[..., 0]
+                loss_sum += float(-gold.sum())
+                correct += int((logits.argmax(-1) == y).sum())
+                total += int(np.prod(y.shape))
+        return {"acc": correct / max(total, 1), "loss": loss_sum / max(total, 1)}

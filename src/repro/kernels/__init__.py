@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+coded_matmul — Lagrange encode/decode: coefficient matrix x shard-stacked
+               parameter blocks, streamed through the MXU (paper eq. 6/7).
+calibrate    — fused eq.(3) calibration: weighted delta accumulation in one
+               HBM pass instead of M.
+window_attn  — sliding-window flash attention with structural block skipping
+               (gemma3 local layers; window variants for the dense archs'
+               long_500k shape).
+
+All kernels are TARGETED at TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+VALIDATED here in interpret mode against the pure-jnp oracles in ref.py.
+"""
+
+
+def on_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,1 @@
+from repro.kernels.calibrate.ops import calibrate_update  # noqa: F401

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: fused calibration accumulate (paper eq. 3).
+
+Naively, w <- w + sum_m c_m * d_m is M+1 HBM passes over P-sized vectors
+(398B-scale for jamba). Fused, each P-block is read once for w and once per
+delta row *within a single VMEM-resident tile*, and written once:
+HBM traffic = (M+1) reads + 1 write of P, with the accumulate on-chip.
+
+The (M, block_p) delta tile and (1, block_p) w tile live in VMEM; the M
+coefficients ride along as a (1, M) operand, so the accumulate is a
+(1,M)x(M,block_p) MXU matvec fused with the add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, d_ref, c_ref, o_ref):
+    acc = jax.lax.dot(c_ref[...], d_ref[...],
+                      preferred_element_type=jnp.float32)     # (1, block_p)
+    o_ref[...] = w_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def calibrate_kernel(w: jnp.ndarray, deltas: jnp.ndarray, coeffs: jnp.ndarray,
+                     *, block_p: int = 8192,
+                     interpret: bool = False) -> jnp.ndarray:
+    """w: (1, P); deltas: (M, P); coeffs: (1, M). M mult of 8, P of block_p."""
+    m, p = deltas.shape
+    assert w.shape == (1, p) and coeffs.shape == (1, m)
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32), deltas.astype(jnp.float32),
+      coeffs.astype(jnp.float32))

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the fused calibration kernel (+ pytree-level helper)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.calibrate.kernel import calibrate_kernel
+
+
+def calibrate_update(w: jnp.ndarray, deltas: jnp.ndarray,
+                     coeffs: jnp.ndarray, block_p: int = 8192) -> jnp.ndarray:
+    """w: (P,), deltas: (M,P), coeffs: (M,) -> (P,) = w + coeffs @ deltas."""
+    p = w.shape[0]
+    m = deltas.shape[0]
+    block_p = min(block_p, max(128, ((p + 127) // 128) * 128))
+    pad_p = (-p) % block_p
+    pad_m = (-m) % 8
+    wp = jnp.pad(w, (0, pad_p))[None]
+    dp = jnp.pad(deltas, ((0, pad_m), (0, pad_p)))
+    cp = jnp.pad(coeffs, (0, pad_m))[None]
+    out = calibrate_kernel(wp, dp, cp, block_p=block_p, interpret=not on_tpu())
+    return out[0, :p]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused eq.(3) calibration update."""
+import jax.numpy as jnp
+
+
+def calibrate_update_ref(w: jnp.ndarray, deltas: jnp.ndarray,
+                         coeffs: jnp.ndarray) -> jnp.ndarray:
+    """w: (P,) current unlearned global; deltas: (M, P) retrained client
+    updates; coeffs: (M,) = ||w^g_m|| / (M * ||w'^{g'}_m||) — eq. (3).
+
+    Returns w + coeffs @ deltas.
+    """
+    return (w.astype(jnp.float32)
+            + coeffs.astype(jnp.float32) @ deltas.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.coded_matmul.ops import coded_matmul  # noqa: F401

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: coefficient-matrix x parameter-block matmul.
+
+The parameter dimension P (up to ~4e11 elements for jamba-398B) is tiled into
+VMEM-resident blocks; the (C, S) coefficient matrix is tiny and stays resident
+across the whole grid. Each grid step computes one (C, block_p) output tile on
+the MXU. Blocks are 128-aligned on the lane dimension; C and S are padded to
+the f32 sublane tile (8) by the ops wrapper.
+
+VMEM working set per step = (C*S + S*block_p + C*block_p) * 4B
+  e.g. C=128, S=8, block_p=4096: ~2.2 MiB — well inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(coeff_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot(
+        coeff_ref[...], w_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def coded_matmul_kernel(coeff: jnp.ndarray, w: jnp.ndarray, *,
+                        block_p: int = 4096,
+                        interpret: bool = False) -> jnp.ndarray:
+    """coeff: (C, S); w: (S, P) with C,S multiples of 8 and P a multiple of
+    block_p (the ops wrapper pads). Returns (C, P) f32."""
+    c, s = coeff.shape
+    s2, p = w.shape
+    assert s == s2 and p % block_p == 0, (coeff.shape, w.shape, block_p)
+    grid = (p // block_p,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, s), lambda i: (0, 0)),          # resident
+            pl.BlockSpec((s, block_p), lambda i: (0, i)),    # streamed
+        ],
+        out_specs=pl.BlockSpec((c, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c, p), jnp.float32),
+        interpret=interpret,
+    )(coeff.astype(jnp.float32), w.astype(jnp.float32))

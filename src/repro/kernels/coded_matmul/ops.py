@@ -1,0 +1,30 @@
+"""Jit'd public wrapper: pads to TPU tile alignment, dispatches to the Pallas
+kernel (interpret mode on CPU), unpads."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.coded_matmul.kernel import coded_matmul_kernel
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def coded_matmul(coeff: jnp.ndarray, w: jnp.ndarray,
+                 block_p: int = 4096) -> jnp.ndarray:
+    """(C,S) @ (S,P) -> (C,P) through the Pallas MXU kernel."""
+    c, s = coeff.shape
+    _, p = w.shape
+    block_p = min(block_p, max(128, ((p + 127) // 128) * 128))
+    coeff_p = _pad_to(_pad_to(coeff, 0, 8), 1, 8)
+    w_p = _pad_to(_pad_to(w, 0, 8), 1, block_p)
+    out = coded_matmul_kernel(coeff_p, w_p, block_p=block_p,
+                              interpret=not on_tpu())
+    return out[:c, :p]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the coded matmul (Lagrange encode / RS decode core)."""
+import jax.numpy as jnp
+
+
+def coded_matmul_ref(coeff: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """coeff: (C, S) f32 coefficient matrix; w: (S, P) shard-stacked params.
+
+    Returns (C, P) — eq. (6) when coeff is the encode matrix, eq. (7) when it
+    is the decode (re-interpolation) matrix.
+    """
+    return coeff.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused selective-SSM (mamba) scan.
+
+The §Roofline analysis (EXPERIMENTS.md pair 3) shows the pure-XLA chunked
+scan is memory-bound by ~70x on jamba-398B: the (B, chunk, d_inner, n) decay/
+input tensors round-trip HBM every chunk. This kernel keeps the recurrence
+state AND all per-step intermediates in VMEM: HBM traffic per (batch,
+d-block, chunk) grid step is just the dt/x tiles in, y tile out — the in/out
+projections' traffic, ~O(n)=16x less than the XLA form.
+
+Layout: grid (B, d_inner/BLK_D, S/CHUNK); the chunk axis iterates sequentially
+(TPU grids are sequential, last dim fastest) carrying h (BLK_D, n) in VMEM
+scratch. Inside a grid step, a fori_loop walks the CHUNK timesteps: each step
+is (BLK_D, n) elementwise FMA + a reduction over n — VPU work on VMEM tiles.
+
+VMEM per step: dt/x/y tiles (CHUNK x BLK_D) * 3 + b/c (CHUNK x n) + A
+(BLK_D x n) + h: with CHUNK=256, BLK_D=512, n=16: ~1.6 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, h0_ref, y_ref, hout_ref,
+            h_ref, *, chunk: int, nstate: int):
+    j = pl.program_id(2)          # chunk index (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)                 # (BLK_D, n)
+
+    def step(t, _):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)     # (BLK_D,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)
+        b_t = b_ref[0, t, :].astype(jnp.float32)       # (n,)
+        c_t = c_ref[0, t, :].astype(jnp.float32)
+        abar = jnp.exp(dt_t[:, None] * a)              # (BLK_D, n)
+        bu = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = abar * h_ref[...] + bu
+        h_ref[...] = h
+        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "blk_d", "interpret"))
+def ssm_scan_kernel(dt, b, c, x, a, h0, *, chunk: int = 256,
+                    blk_d: int = 512, interpret: bool = False):
+    """dt, x: (B,S,D); b, c: (B,S,n); a: (D,n); h0: (B,D,n).
+    S % chunk == 0 and D % blk_d == 0 (ops wrapper pads).
+    Returns (y (B,S,D) f32, h_last (B,D,n) f32)."""
+    bsz, s, d = dt.shape
+    n = b.shape[-1]
+    assert s % chunk == 0 and d % blk_d == 0
+    grid = (bsz, d // blk_d, s // chunk)
+    kernel = functools.partial(_kernel, chunk=chunk, nstate=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, blk_d), lambda bi, di, j: (bi, j, di)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, j: (bi, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, j: (bi, j, 0)),
+            pl.BlockSpec((1, chunk, blk_d), lambda bi, di, j: (bi, j, di)),
+            pl.BlockSpec((blk_d, n), lambda bi, di, j: (di, 0)),
+            pl.BlockSpec((1, blk_d, n), lambda bi, di, j: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, blk_d), lambda bi, di, j: (bi, j, di)),
+            pl.BlockSpec((1, blk_d, n), lambda bi, di, j: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((blk_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, b, c, x, a, h0)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper: pads D to the block size and S to the chunk, dispatches to
+the Pallas kernel (interpret off-TPU), unpads."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+
+
+def ssm_scan(dt, b, c, x, a, h0, chunk: int = 256, blk_d: int = 512):
+    """Fused selective-SSM scan. Shapes as in ref.ssm_scan_ref."""
+    bsz, s, d = dt.shape
+    n = b.shape[-1]
+    chunk = min(chunk, max(8, s))
+    blk_d = min(blk_d, max(128, d))
+    pad_s = (-s) % chunk
+    pad_d = (-d) % blk_d
+    if pad_s or pad_d:
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, pad_d)))
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_s), (0, 0)))
+        a = jnp.pad(a, ((0, pad_d), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_d), (0, 0)))
+    y, h_last = ssm_scan_kernel(dt, b, c, x, a, h0, chunk=chunk, blk_d=blk_d,
+                                interpret=not on_tpu())
+    return y[:, :s, :d], h_last[:, :d]

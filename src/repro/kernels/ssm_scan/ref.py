@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused selective-SSM scan (mamba recurrence).
+
+Deliberately written as the straightforward O(S) time loop — independent of
+the chunked production implementation in models/mamba.py — so both the Pallas
+kernel and the chunked path can be validated against it.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, b, c, x, a, h0):
+    """dt, x: (B,S,di); b, c: (B,S,n); a: (di,n) (negative); h0: (B,di,n).
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * b_t * x_t
+    y_t = sum_n c_t[n] * h_t[:, n]
+
+    Returns (y (B,S,di) f32, h_last (B,di,n) f32).
+    """
+    dt32 = dt.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+
+    def step(h, tc):
+        dt_t, b_t, c_t, x_t = tc                       # (B,di),(B,n),(B,n),(B,di)
+        abar = jnp.exp(dt_t[..., None] * a32)          # (B,di,n)
+        bu = dt_t[..., None] * b_t[:, None, :] * x_t[..., None].astype(jnp.float32)
+        h = abar * h + bu
+        y = jnp.einsum("bn,bdn->bd", c_t.astype(jnp.float32), h)
+        return h, y
+
+    xs = (dt32.transpose(1, 0, 2), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), x.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h_last

@@ -1,0 +1,1 @@
+from repro.kernels.window_attn.ops import window_attention  # noqa: F401

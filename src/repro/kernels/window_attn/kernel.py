@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: causal sliding-window flash attention.
+
+Structural skipping: for query block i (size BLK), only the kv blocks
+[i - span + 1, i] are ever touched, where span = ceil(window/BLK) + 1. The
+grid is (BH, num_q_blocks, span); the kv BlockSpec's index_map points block j
+of the span at kv block (i - span + 1 + j) — negative indices clamp to 0 and
+are masked out by position arithmetic inside the kernel. Compute and HBM
+traffic are O(S * window) instead of O(S^2).
+
+Online softmax state (m, l, acc) lives in VMEM scratch and persists across the
+span dimension (TPU grids iterate sequentially, last axis fastest); the output
+tile is written on the span's final step.
+
+VMEM per step: q/k/v/out tiles (BLK x D) + acc — e.g. BLK=256, D=128:
+4 * 256*128*4B = 512 KiB. MXU-aligned: BLK, D multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            blk: int, span: int, window: int, scale: float):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # span step
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_block = i - span + 1 + j   # may be negative -> clamped read, masked
+    q_pos = i * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    kv_pos = kv_block * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    mask = (kv_pos >= 0) & (kv_pos <= q_pos) & (kv_pos > q_pos - window)
+
+    s = jax.lax.dot_general(
+        q_ref[0], k_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == span - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk", "interpret",
+                                              "scale"))
+def window_attention_kernel(q, k, v, *, window: int, blk: int = 256,
+                            interpret: bool = False, scale: float = None):
+    """q, k, v: (BH, S, D); S multiple of blk, D multiple of 128 (wrapper
+    pads). ``scale`` must be the UNPADDED head_dim's softmax scale when D was
+    padded. Returns (BH, S, D) f32."""
+    bh, s, d = q.shape
+    assert s % blk == 0
+    nq = s // blk
+    span = (window + blk - 1) // blk + 1
+    span = min(span, nq)
+    if scale is None:
+        scale = d ** -0.5
+    kernel = functools.partial(_kernel, blk=blk, span=span, window=window,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, span),
+        in_specs=[
+            pl.BlockSpec((1, blk, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk, d),
+                         lambda b, i, j, span=span: (b, i - span + 1 + j, 0)),
+            pl.BlockSpec((1, blk, d),
+                         lambda b, i, j, span=span: (b, i - span + 1 + j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((blk, d), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

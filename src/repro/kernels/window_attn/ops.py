@@ -1,0 +1,33 @@
+"""Jit'd wrapper: pads (S -> blk, D -> 128), handles GQA head layout, and
+dispatches to the Pallas kernel (interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.window_attn.kernel import window_attention_kernel
+
+
+def window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     window: int, blk: int = 256) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd). Causal sliding-window flash
+    attention; returns (B, S, H, hd) in q.dtype."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # expand kv heads to match q heads (GQA) and fold (B, H) into one axis
+    k_e = jnp.repeat(k, g, axis=2)
+    v_e = jnp.repeat(v, g, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kt = k_e.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vt = v_e.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    blk = min(blk, max(128, s))
+    pad_s = (-s) % blk
+    pad_d = (-hd) % 128
+    if pad_s or pad_d:
+        cfg = ((0, 0), (0, pad_s), (0, pad_d))
+        qt, kt, vt = (jnp.pad(x, cfg) for x in (qt, kt, vt))
+    out = window_attention_kernel(qt, kt, vt, window=window, blk=blk,
+                                  interpret=not on_tpu(), scale=hd ** -0.5)
+    out = out[:, :s, :hd].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: causal sliding-window attention (single head layout)."""
+import jax.numpy as jnp
+
+
+def window_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         window: int) -> jnp.ndarray:
+    """q, k, v: (BH, S, D). Causal; each query attends to keys in
+    (pos - window, pos]. Returns (BH, S, D) f32."""
+    bh, s, d = q.shape
+    scale = d ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    ok = (kp <= qp) & (kp > qp - window)
+    logits = jnp.where(ok[None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

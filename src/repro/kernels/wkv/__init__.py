@@ -1,0 +1,1 @@
+from repro.kernels.wkv.ops import wkv  # noqa: F401

@@ -1,0 +1,31 @@
+"""Jit'd wrapper: folds (B, H) into the grid axis, broadcasts u per head,
+pads S to the chunk, dispatches (interpret off-TPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import on_tpu
+from repro.kernels.wkv.kernel import wkv_kernel
+
+
+def wkv(r, k, v, lw, u, h0, chunk: int = 256):
+    """r,k,v,lw: (B,S,H,N) f32; u: (H,N); h0: (B,H,N,N).
+    Returns (y (B,S,H,N) f32, h_last (B,H,N,N))."""
+    b, s, h, n = r.shape
+    chunk = min(chunk, max(8, s))
+    pad_s = (-s) % chunk
+
+    def fold(x):
+        x = x.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+        if pad_s:
+            x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0)))
+        return x
+
+    rf, kf, vf = fold(r), fold(k), fold(v)
+    lwf = fold(lw)
+    uf = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, n)
+    h0f = h0.reshape(b * h, n, n)
+    y, h_last = wkv_kernel(rf, kf, vf, lwf, uf, h0f, chunk=chunk,
+                           interpret=not on_tpu())
+    y = y[:, :s].reshape(b, h, s, n).transpose(0, 2, 1, 3)
+    return y, h_last.reshape(b, h, n, n)

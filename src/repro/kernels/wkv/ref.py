@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential form).
+
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   w_t = exp(lw_t)
+
+Independent of the chunk-parallel production path in models/rwkv6.py.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, lw, u, h0):
+    """r,k,v,lw: (B,S,N) f32 (single head); u: (N,); h0: (B,N,N).
+    Returns (y (B,S,N), h_last (B,N,N))."""
+
+    def step(h, tc):
+        r_t, k_t, v_t, lw_t = tc                       # (B,N) each
+        kv = k_t[..., None] * v_t[:, None, :]          # (B,N,N)
+        y = jnp.einsum("bn,bnm->bm", r_t, h + u[None, :, None] * kv)
+        h = jnp.exp(lw_t)[..., None] * h + kv
+        return h, y
+
+    xs = (r.transpose(1, 0, 2), k.transpose(1, 0, 2),
+          v.transpose(1, 0, 2), lw.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_last

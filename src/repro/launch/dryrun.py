@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline terms from the compiled
+artifact. No arrays are allocated — inputs are ShapeDtypeStructs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results are dumped as JSON under experiments/dryrun/ for the roofline report
+(EXPERIMENTS.md Sec Dry-run / Sec Roofline).
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — jax locks the
+host device count at first backend init. Smoke tests / benches import jax
+normally and see 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, FLConfig, OptimizerConfig, SHAPES,
+                           get_config)
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (act_rules, batch_shardings,
+                                    cache_shardings, needs_fsdp,
+                                    opt_state_shardings, param_rules,
+                                    param_shardings)
+from repro.launch.train import make_fedavg_step
+from repro.launch.serve import make_decode_step, make_prefill_step
+from repro.models import abstract_params, init_cache
+from repro.models.transformer import ShardCtx
+from repro.optim import make_optimizer
+from repro.roofline.analysis import analyze_compiled
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# long_500k policy (DESIGN.md): pure full-attention archs run it only as their
+# sliding-window variant; whisper skips it outright (448-token decoder).
+WINDOW_VARIANT_FOR_LONG = {"olmo-1b", "yi-6b", "llama3.2-3b", "internvl2-2b"}
+SKIP_LONG = {"whisper-tiny"}
+LONG_WINDOW = 8192
+
+
+def resolve_config(arch: str, shape_name: str, variant: str = "auto"):
+    """Returns (cfg, notes) with the long-context variant policy applied."""
+    cfg = get_config(arch)
+    notes = []
+    if shape_name == "long_500k":
+        if arch in SKIP_LONG:
+            return None, [f"{arch} skips long_500k (architectural decoder "
+                          f"context {cfg.decoder_context})"]
+        if arch in WINDOW_VARIANT_FOR_LONG or variant == "window":
+            cfg = dataclasses.replace(cfg, layer_pattern=("local",),
+                                      sliding_window=LONG_WINDOW)
+            notes.append(f"sliding-window variant (w={LONG_WINDOW}) for "
+                         "sub-quadratic long-context decode")
+    return cfg, notes
+
+
+def optimizer_for(cfg) -> OptimizerConfig:
+    name = "adamw_bf16" if cfg.param_count() > 100e9 else "adamw"
+    return OptimizerConfig(name=name, lr=3e-4)
+
+
+SEQPAR_MAX_PARAMS = 8e9
+
+
+def resolve_strategy(cfg, shape_kind: str, strategy: str) -> str:
+    """'auto': sequence-parallel prefill for attention-only models whose head
+    counts don't divide the model axis (TP there degenerates into per-block
+    all-reduces — see §Perf llama3.2 log) and that fit replicated; TP
+    otherwise. Recurrent stacks (rwkv/mamba) are excluded: their time scans
+    cannot shard over seq, so seq-parallel replicates the recurrence."""
+    if strategy != "auto":
+        return strategy
+    attention_only = all(k in ("global", "local") for k in cfg.layer_kinds)
+    if (shape_kind == "prefill" and attention_only
+            and (cfg.num_heads % 16 or cfg.num_kv_heads % 16)
+            and cfg.param_count() < SEQPAR_MAX_PARAMS):
+        return "seq_parallel"
+    return "tp"
+
+
+PROFILES = {
+    # paper-faithful: masked-full attention blocks, f32 scan internals, TP
+    "baseline": {"overrides": {}, "strategy": "tp"},
+    # beyond-paper §Perf: triangle block skipping, bf16 ssm chunks, auto
+    # sequence-parallel prefill
+    "optimized": {"overrides": {"attn_block_skip": True,
+                                "ssm_chunk_dtype": "bfloat16"},
+                  "strategy": "auto"},
+}
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  variant: str = "auto", fl: FLConfig = None,
+                  overrides: dict = None, strategy: str = "tp"):
+    """Lower the right step for (arch, shape) on the production mesh.
+
+    Returns (lowered, mesh, cfg, notes) or (None, None, None, notes) on skip.
+    """
+    cfg, notes = resolve_config(arch, shape_name, variant)
+    if cfg is None:
+        return None, None, None, notes
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    fl = fl or FLConfig(fl_clients_per_step=4, fl_local_steps=1)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strategy = resolve_strategy(cfg, shape.kind, strategy)
+    if strategy == "seq_parallel":
+        # q must stay a single shardable dim (scans can't shard over seq)
+        cfg = dataclasses.replace(cfg, attn_block_q=0, attn_block_skip=False)
+        notes.append("seq_parallel prefill (head counts don't divide TP axis)")
+    prules = param_rules(cfg, shape.kind, multi_pod, strategy=strategy)
+    arules = act_rules(cfg, shape.kind, multi_pod, strategy=strategy)
+    ctx = ShardCtx(mesh, arules)
+    p_abs = abstract_params(cfg)
+    p_sh = param_shardings(cfg, mesh, prules, abstract=p_abs)
+
+    if shape.kind == "train":
+        opt = optimizer_for(cfg)
+        step = make_fedavg_step(cfg, fl, opt, ctx, remat="block")
+        opt_init, _ = make_optimizer(opt)
+        o_abs = jax.eval_shape(opt_init, p_abs)
+        o_sh = opt_state_shardings(o_abs, p_sh, mesh)
+        b_abs = inp.train_batch_specs(cfg, shape, fl)
+        b_sh = batch_shardings(b_abs, mesh, arules, client_leading=True)
+        jitted = jax.jit(step, in_shardings=((p_sh, o_sh), b_sh))
+        lowered = jitted.lower((p_abs, o_abs), b_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        b_abs = inp.prefill_batch_specs(cfg, shape)
+        b_sh = batch_shardings(b_abs, mesh, arules)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(p_abs, b_abs)
+    else:  # decode
+        step = make_decode_step(cfg, ctx)
+        cache_len, enc_len = inp.cache_len_for(cfg, shape)
+        c_abs = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, cache_len,
+                               dtype=jnp.dtype(cfg.compute_dtype),
+                               enc_len=enc_len))
+        c_sh = cache_shardings(c_abs, mesh, arules)
+        t_abs = inp.decode_token_specs(shape)
+        t_sh = batch_shardings({"tokens": t_abs}, mesh, arules)["tokens"]
+        # pin the output cache to the input cache's shardings so donation
+        # aliases the (large) KV buffers instead of copying them
+        jitted = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = jitted.lower(p_abs, t_abs, c_abs)
+    return lowered, mesh, cfg, notes
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            variant: str = "auto", save: bool = True,
+            overrides: dict = None, tag: str = "",
+            strategy: str = "tp") -> dict:
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok", "notes": [], "strategy": strategy}
+    try:
+        lowered, mesh, cfg, notes = build_lowered(arch, shape_name, multi_pod,
+                                                  variant, overrides=overrides,
+                                                  strategy=strategy)
+        rec["notes"] = notes
+        if lowered is None:
+            rec["status"] = "skipped"
+            return _finish(rec, t0, save, tag)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = _mem_dict(mem)
+        rec["cost_analysis"] = {k: float(v) for k, v in
+                                (compiled.cost_analysis() or {}).items()
+                                if isinstance(v, (int, float))}
+        rec.update(analyze_compiled(compiled, mesh, cfg, SHAPES[shape_name]))
+        print(compiled.memory_analysis())
+        ca = rec["cost_analysis"]
+        print({k: ca[k] for k in ("flops", "bytes accessed")
+               if k in ca})
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _finish(rec, t0, save, tag)
+
+
+def _mem_dict(mem):
+    if mem is None:
+        return None
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    return out
+
+
+def _finish(rec, t0, save, tag):
+    rec["wall_s"] = round(time.time() - t0, 2)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
+        (OUT_DIR / name).write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = "" if status == "ok" else f" ({rec.get('error', '')[:120]})"
+    print(f"[dryrun] {rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:8s} "
+          f"{status:7s} {rec['wall_s']:8.1f}s{extra}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="auto")
+    ap.add_argument("--profile", default="baseline",
+                    choices=list(PROFILES))
+    args = ap.parse_args(argv)
+
+    prof = PROFILES[args.profile]
+    tag = "" if args.profile == "baseline" else "_opt"
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_one(arch, shape, mp, args.variant,
+                                       overrides=prof["overrides"],
+                                       strategy=prof["strategy"], tag=tag))
+    bad = [r for r in results if r["status"] == "error"]
+    print(f"[dryrun] {len(results)} combos: "
+          f"{sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input — weak-type
+correct, shardable, no device allocation. The one allowed stub: audio frames /
+vision patches arrive as precomputed embeddings of the right shape."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig, ShapeConfig
+
+AUDIO_ENC_FRAMES = 1500   # whisper 30s window after conv frontend
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      fl: FLConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Client-serial FedAvg layout: (n_clients, per_client_batch, ...)."""
+    nc = fl.fl_clients_per_step
+    bpc = shape.global_batch // nc
+    assert bpc * nc == shape.global_batch
+    s = shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((nc, bpc, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((nc, bpc, s), jnp.int32),
+    }
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((nc, bpc, cfg.vision_tokens,
+                                               cfg.d_model), cdt)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((nc, bpc, AUDIO_ENC_FRAMES,
+                                              cfg.d_model), cdt)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig,
+                        shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model),
+                                              cdt)
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((b, AUDIO_ENC_FRAMES, cfg.d_model),
+                                             cdt)
+    return out
+
+
+def decode_token_specs(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[int, int]:
+    """(cache_len, enc_len) for the decode cache."""
+    cache_len = shape.seq_len + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    enc_len = AUDIO_ENC_FRAMES if cfg.family == "audio" else 0
+    return cache_len, enc_len

@@ -1,0 +1,18 @@
+"""Production mesh construction (a FUNCTION, not a module-level constant, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e pod mesh: (data=16, model=16) single pod (256 chips); the
+    multi-pod variant adds a leading pod=2 axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

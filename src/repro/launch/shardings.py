@@ -1,0 +1,207 @@
+"""Sharding policy: logical-axis -> mesh-axis rule tables per (arch x shape),
+plus helpers that turn param/cache/batch pytrees into NamedSharding pytrees.
+
+Policy summary (see DESIGN.md Sec 5):
+  * tensor parallelism over ``model`` for mlp/heads/experts/vocab,
+  * FSDP over ``data`` (x ``pod`` multi-pod) on the ``embed`` dim for models
+    that need it (>2B when training, >40B always — jamba),
+  * batch over ``data`` (x ``pod``),
+  * long-context decode (batch=1): KV *sequence* sharded over data x model,
+  * every assignment is divisibility-checked (spec_for) so odd vocabs/head
+    counts degrade to replication instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import abstract_params, param_axes
+from repro.models.params import spec_for
+
+FSDP_TRAIN_THRESHOLD = 2e9
+FSDP_ALWAYS_THRESHOLD = 40e9
+
+
+def needs_fsdp(cfg: ModelConfig, shape_kind: str) -> bool:
+    n = cfg.param_count()
+    if n > FSDP_ALWAYS_THRESHOLD:
+        return True
+    return shape_kind == "train" and n > FSDP_TRAIN_THRESHOLD
+
+
+def param_rules(cfg: ModelConfig, shape_kind: str, multi_pod: bool,
+                strategy: str = "tp") -> Dict:
+    fsdp = needs_fsdp(cfg, shape_kind)
+    if fsdp:
+        embed = (("pod", "data"), "data") if multi_pod else ("data",)
+    else:
+        embed = ()
+    if strategy == "seq_parallel":
+        # §Perf: pure data+sequence parallelism — weights replicated (vocab
+        # excepted), activations sharded over (data=batch, model=seq). Removes
+        # the per-block TP all-reduces that dominate when heads % model != 0.
+        tensor = ()
+    else:
+        tensor = ("model",)
+    return {
+        "embed": embed,
+        "vocab": ("model",),
+        "mlp": tensor,
+        "heads": tensor,
+        "kv_heads": tensor,
+        "head_dim": tensor,
+        "heads_flat": tensor,
+        "expert": tensor,
+        "expert_router": tensor,
+        "layers": (),
+    }
+
+
+def act_rules(cfg: ModelConfig, shape_kind: str, multi_pod: bool,
+              strategy: str = "tp") -> Dict:
+    batch = ((("pod", "data"), "data") if multi_pod else ("data",))
+    if shape_kind == "decode":
+        # KV sequence sharding: takes whatever the batch dim left free —
+        # everything for long_500k (batch=1), just ``model`` for decode_32k.
+        kvseq = (("data", "model"), "data", "model")
+    else:
+        kvseq = ("model",) if strategy == "seq_parallel" else ()
+    if strategy == "seq_parallel":
+        return {
+            "batch": batch,
+            "seq": ("model",),
+            "embed": (),
+            "heads": (),
+            "kv_heads": (),
+            "head_dim": (),
+            "vocab": (),
+            "kvseq": kvseq,
+            "mlp": (),
+            "layers": (),
+            "moe_group": batch,
+            "expert": (),
+        }
+    return {
+        "batch": batch,
+        "seq": (),
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),
+        "vocab": ("model",),
+        "kvseq": kvseq,
+        "mlp": ("model",),
+        "layers": (),
+        # MoE dispatch: token groups follow batch; experts are model-parallel
+        "moe_group": batch,
+        "expert": ("model",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Param shardings
+# ---------------------------------------------------------------------------
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                        for a in x)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: Dict,
+                    abstract=None):
+    axes = param_axes(cfg)
+    abstract = abstract or abstract_params(cfg)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for(tuple(s.shape), a, rules, mesh)),
+        axes, abstract, is_leaf=_is_axes)
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (leaf-name driven)
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    # attention KV (possibly with a leading scanned-layers dim)
+    "k": ("batch", "kvseq", "kv_heads", "head_dim"),
+    "v": ("batch", "kvseq", "kv_heads", "head_dim"),
+    "xk": ("batch", "kvseq", "kv_heads", "head_dim"),
+    "xv": ("batch", "kvseq", "kv_heads", "head_dim"),
+    # mamba
+    "conv": ("batch", None, "mlp"),
+    "h": None,  # disambiguated by rank below (mamba (B,di,n) vs rwkv (B,H,N,N))
+    # rwkv
+    "tm_prev": ("batch", "embed"),
+    "cm_prev": ("batch", "embed"),
+    "pos": (),
+}
+
+
+def _cache_leaf_axes(path, leaf) -> Tuple:
+    name = None
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            name = k.key
+            break
+    rank = len(leaf.shape)
+    if name == "h":
+        # mamba h: (B, di, n) rank3 / (L, B, di, n) rank4 (square only if
+        # di == n, impossible for assigned configs); rwkv h: (B, H, N, N)
+        # rank4 square tail / (L, B, H, N, N) rank5.
+        if rank == 3 or (rank == 4 and leaf.shape[-1] != leaf.shape[-2]):
+            base = ("batch", "mlp", None)
+        else:
+            base = ("batch", "heads", None, None)
+    else:
+        base = _CACHE_AXES.get(name, ())
+    # account for the leading scanned-layers dim
+    extra = rank - len(base)
+    return ("layers",) * extra + tuple(base)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, rules: Dict):
+    def one(path, leaf):
+        axes = _cache_leaf_axes(path, leaf)
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), axes, rules, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Batch shardings
+# ---------------------------------------------------------------------------
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "patches": ("batch", "seq", "embed"),
+    "frames": ("batch", "seq", "embed"),
+    "images": ("batch", None, None, None),
+}
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, rules: Dict,
+                    client_leading: bool = False):
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        axes = _BATCH_AXES.get(name, ())
+        if client_leading:
+            axes = (None,) + tuple(axes)
+        axes = tuple(axes)[: len(leaf.shape)]
+        axes = axes + (None,) * (len(leaf.shape) - len(axes))
+        return NamedSharding(mesh, spec_for(tuple(leaf.shape), axes, rules, mesh))
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+def opt_state_shardings(opt_abstract, p_shardings, mesh: Mesh):
+    """Moments shard like params; scalars replicate."""
+    def one(leaf, ps=None):
+        return ps if ps is not None else NamedSharding(mesh, P())
+    mu = (jax.tree.map(lambda s, a: s, p_shardings, opt_abstract.mu)
+          if opt_abstract.mu is not None else None)
+    nu = (jax.tree.map(lambda s, a: s, p_shardings, opt_abstract.nu)
+          if opt_abstract.nu is not None else None)
+    from repro.optim.optimizers import OptState
+    return OptState(NamedSharding(mesh, P()), mu, nu)

@@ -1,0 +1,187 @@
+"""Pod-scale training step: one per-shard FedAvg(+server-optimizer) round.
+
+This is the paper's per-shard learning unit mapped to a TPU pod (DESIGN.md
+Sec 3): clients are processed CLIENT-SERIALLY (lax.scan) — each client's
+L local SGD steps run data-parallel over the whole mesh with FSDP/TP-sharded
+parameters, and only the parameter *delta* is carried. The shard server's
+aggregation is the scan's mean-delta; the server optimizer (AdamW — FedOpt
+style) applies it. Isolation holds: no collective crosses the shard boundary
+because one shard owns the mesh for its stage slot.
+
+Also provides the centralized step (the FR baseline / plain pretraining) and
+the calibration round (eq. 3) used by unlearning at production scale.
+
+Run as a module for a CPU-scale demonstration:
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 4
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, ModelConfig, OptimizerConfig, ShapeConfig
+from repro.core.unlearning import tree_norm
+from repro.models import loss_fn
+from repro.models.transformer import NULL_CTX, ShardCtx
+from repro.optim import make_optimizer
+
+LOCAL_LR = 1e-2   # clients' local SGD step (FedAvg inner loop)
+
+
+def make_fedavg_step(cfg: ModelConfig, fl: FLConfig, opt: OptimizerConfig,
+                     ctx: ShardCtx = NULL_CTX, remat: str = "block"):
+    """Returns step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (n_clients, bpc, S), ...} — client-serial layout.
+    state: (params, opt_state).
+    """
+    lf = loss_fn(cfg, ctx, remat=remat)
+    _, opt_update = make_optimizer(opt)
+    n_clients = fl.fl_clients_per_step
+    local_steps = fl.fl_local_steps
+
+    def client_round(params, cbatch):
+        """One client: L local SGD steps on its local batch; returns delta."""
+        def local_step(p, _):
+            loss, grads = jax.value_and_grad(
+                lambda q: lf(q, cbatch)[0])(p)
+            p = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - LOCAL_LR * g.astype(jnp.float32)).astype(w.dtype),
+                p, grads)
+            return p, loss
+
+        p_new, losses = jax.lax.scan(local_step, params, None,
+                                     length=local_steps)
+        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype), p_new, params)
+        return delta, losses.mean()
+
+    def step(state, batch):
+        params, opt_state = state
+
+        def scan_body(acc, cbatch):
+            delta, loss = client_round(params, cbatch)
+            acc = jax.tree.map(lambda a, d: a + d.astype(a.dtype) / n_clients,
+                               acc, delta)
+            return acc, loss
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        acc, losses = jax.lax.scan(scan_body, acc0, batch)
+        # server update (FedOpt): pseudo-gradient = -mean delta
+        pseudo_grad = jax.tree.map(lambda d: -d, acc)
+        new_params, new_opt = opt_update(params, pseudo_grad, opt_state)
+        metrics = {"loss": losses.mean(),
+                   "delta_norm": tree_norm(acc)}
+        return (new_params, new_opt), metrics
+
+    return step
+
+
+def make_central_step(cfg: ModelConfig, opt: OptimizerConfig,
+                      ctx: ShardCtx = NULL_CTX, remat: str = "block"):
+    """Plain data-parallel training step (FR baseline / pretraining).
+
+    batch: {"tokens": (B, S), ...}.
+    """
+    lf = loss_fn(cfg, ctx, remat=remat)
+    _, opt_update = make_optimizer(opt)
+
+    def step(state, batch):
+        params, opt_state = state
+        (loss, mets), grads = jax.value_and_grad(lf, has_aux=True)(params, batch)
+        new_params, new_opt = opt_update(params, grads, opt_state)
+        return (new_params, new_opt), mets
+
+    return step
+
+
+def make_calibration_step(cfg: ModelConfig, fl: FLConfig,
+                          ctx: ShardCtx = NULL_CTX, remat: str = "block"):
+    """One production-scale calibrated retraining round (paper eq. 3).
+
+    step(params, batch, stored_norms) -> (params, metrics).
+    batch is client-serial; stored_norms: (n_clients,) historical ||delta||
+    (retrieved via the coded store). Retained clients run L/r local steps;
+    each client's delta is rescaled to its historical norm, then averaged.
+    """
+    lf = loss_fn(cfg, ctx, remat=remat)
+    n_clients = fl.fl_clients_per_step
+    local_steps = max(int(fl.fl_local_steps / fl.retrain_ratio), 1)
+
+    def client_round(params, cbatch):
+        def local_step(p, _):
+            loss, grads = jax.value_and_grad(lambda q: lf(q, cbatch)[0])(p)
+            p = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32)
+                              - LOCAL_LR * g.astype(jnp.float32)).astype(w.dtype),
+                p, grads)
+            return p, loss
+
+        p_new, losses = jax.lax.scan(local_step, params, None, length=local_steps)
+        delta = jax.tree.map(lambda a, b: (a - b).astype(a.dtype), p_new, params)
+        return delta, losses.mean()
+
+    def step(params, batch, stored_norms):
+        def scan_body(acc, xs):
+            cbatch, hist_norm = xs
+            delta, loss = client_round(params, cbatch)
+            ratio = hist_norm / jnp.maximum(tree_norm(delta), 1e-12)
+            acc = jax.tree.map(
+                lambda a, d: a + (d.astype(jnp.float32) * ratio / n_clients
+                                  ).astype(a.dtype), acc, delta)
+            return acc, loss
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        acc, losses = jax.lax.scan(scan_body, acc0, (batch, stored_norms))
+        new_params = jax.tree.map(lambda p, a: p + a.astype(p.dtype), params, acc)
+        return new_params, {"loss": losses.mean()}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# CPU-scale demo driver
+# ---------------------------------------------------------------------------
+
+def _demo(argv=None):
+    import argparse
+    import numpy as np
+    from repro.configs import FLConfig, OptimizerConfig, get_config, reduce_for_smoke
+    from repro.models import init_params
+    from repro.optim import init_optimizer
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    fl = FLConfig(fl_clients_per_step=args.clients,
+                  fl_local_steps=args.local_steps)
+    opt = OptimizerConfig(name="adamw", lr=1e-3)
+    params = init_params(cfg, jax.random.key(0))
+    state = (params, init_optimizer(opt, params))
+    step = jax.jit(make_fedavg_step(cfg, fl, opt))
+    rng = np.random.default_rng(0)
+    for i in range(args.steps):
+        toks = rng.integers(0, cfg.vocab_size, (args.clients, 2, 64))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((args.clients, 2, cfg.vision_tokens,
+                                          cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((args.clients, 2, 64, cfg.d_model),
+                                        jnp.float32)
+        state, mets = step(state, batch)
+        print(f"fedavg round {i}: loss={float(mets['loss']):.4f} "
+              f"delta={float(mets['delta_norm']):.4f}")
+
+
+if __name__ == "__main__":
+    _demo()

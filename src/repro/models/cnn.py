@@ -1,0 +1,52 @@
+"""The paper's CNN classifier: 2 conv + 2 pool + 2 fully-connected layers
+(Sec 5.1), used for the MNIST / Fashion-MNIST / CIFAR-10 experiments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamFactory
+
+
+def init_cnn(fac: ParamFactory, cfg: ModelConfig):
+    c1, c2 = cfg.cnn_channels
+    # after two 2x2 pools the spatial dim is image_size // 4
+    flat = (cfg.image_size // 4) ** 2 * c2
+    with fac.scope("cnn"):
+        return {
+            "conv1": fac.param("conv1", (3, 3, cfg.image_channels, c1),
+                               (None, None, None, "mlp"), scale=1.4, in_dims=3),
+            "b1": fac.param("b1", (c1,), ("mlp",), init="zeros"),
+            "conv2": fac.param("conv2", (3, 3, c1, c2), (None, None, None, "mlp"),
+                               scale=1.4, in_dims=3),
+            "b2": fac.param("b2", (c2,), ("mlp",), init="zeros"),
+            "fc1": fac.param("fc1", (flat, cfg.d_model), (None, "mlp")),
+            "fb1": fac.param("fb1", (cfg.d_model,), ("mlp",), init="zeros"),
+            "fc2": fac.param("fc2", (cfg.d_model, cfg.num_classes), ("mlp", None)),
+            "fb2": fac.param("fb2", (cfg.num_classes,), (None,), init="zeros"),
+        }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, images):
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = jax.nn.relu(_conv(images, params["conv1"], params["b1"]))
+    x = _pool(x)
+    x = jax.nn.relu(_conv(x, params["conv2"], params["b2"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["fb1"])
+    return x @ params["fc2"] + params["fb2"]

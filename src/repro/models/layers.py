@@ -1,0 +1,116 @@
+"""Shared layers: norms, gated MLP, embeddings, RoPE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamFactory
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def pad_vocab(vocab: int, multiple: int = 512) -> int:
+    """Pad vocab to a mesh/MXU-friendly multiple (production-style)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(fac: ParamFactory, cfg: ModelConfig, name: str):
+    if cfg.norm_type == "nonparametric":
+        return {}
+    return {"scale": fac.param(f"{name}.scale", (cfg.d_model,), ("embed",), init="ones")}
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm" or cfg.norm_type == "nonparametric":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    if p:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(fac: ParamFactory, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    with fac.scope("mlp"):
+        return {
+            "wi_gate": fac.param("wi_gate", (cfg.d_model, d_ff), ("embed", "mlp")),
+            "wi_up": fac.param("wi_up", (cfg.d_model, d_ff), ("embed", "mlp")),
+            "wo": fac.param("wo", (d_ff, cfg.d_model), ("mlp", "embed")),
+        }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    act = ACTS[cfg.act]
+    h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(fac: ParamFactory, cfg: ModelConfig):
+    v = pad_vocab(cfg.vocab_size)
+    with fac.scope("embed"):
+        p = {"table": fac.param("table", (v, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = fac.param("unembed", (cfg.d_model, v), ("embed", "vocab"))
+    return p
+
+
+def apply_embed(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def apply_unembed(p, x, cfg: ModelConfig):
+    v = pad_vocab(cfg.vocab_size)
+    if cfg.tie_embeddings:
+        logits = x @ p["table"].T
+    else:
+        logits = x @ p["unembed"]
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    # mask padded vocab entries
+    mask = jnp.arange(v) < cfg.vocab_size
+    return jnp.where(mask, logits, -1e9)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

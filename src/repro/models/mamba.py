@@ -1,0 +1,161 @@
+"""Mamba selective-SSM block (jamba's recurrent layer).
+
+Diagonal-A selective scan, evaluated in time chunks: ``lax.scan`` over chunks
+carrying the (B, d_inner, n) state, with an associative scan inside each chunk
+(log-depth on the MXU-friendly chunk). Decode is a single recurrence step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamFactory
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def init_mamba(fac: ParamFactory, cfg: ModelConfig):
+    d, di, n, r, w = cfg.d_model, d_inner(cfg), cfg.ssm_state_dim, dt_rank(cfg), cfg.ssm_conv_width
+    with fac.scope("mamba"):
+        return {
+            "in_proj": fac.param("in_proj", (d, 2 * di), ("embed", "mlp")),
+            "conv_w": fac.param("conv_w", (w, di), (None, "mlp"), scale=0.5),
+            "conv_b": fac.param("conv_b", (di,), ("mlp",), init="zeros"),
+            "x_proj": fac.param("x_proj", (di, r + 2 * n), ("mlp", None)),
+            "dt_proj": fac.param("dt_proj", (r, di), (None, "mlp")),
+            "dt_bias": fac.param("dt_bias", (di,), ("mlp",), init="constant", scale=-2.0),
+            # log(-A): A = -exp(a_log); init A ~ -[1..n]
+            "a_log": fac.param("a_log", (di, n), ("mlp", None), init="uniform", scale=1.5),
+            "d_skip": fac.param("d_skip", (di,), ("mlp",), init="ones"),
+            "out_proj": fac.param("out_proj", (di, d), ("mlp", "embed")),
+        }
+
+
+def _conv1d_causal(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,di); conv_w: (w,di).
+
+    conv_state: (B, w-1, di) previous inputs for decode continuity.
+    Returns (y, new_state).
+    """
+    w = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)                  # (B, S+w-1, di)
+    y = sum(xp[:, i:i + x.shape[1]] * conv_w[i] for i in range(w))
+    new_state = xp[:, -(w - 1):] if w > 1 else conv_state
+    return y + conv_b, new_state
+
+
+def _ssm_params(p, x, cfg: ModelConfig):
+    """x: (B,T,di) -> dt (B,T,di), B_ (B,T,n), C_ (B,T,n)."""
+    n, r = cfg.ssm_state_dim, dt_rank(cfg)
+    xdb = x @ p["x_proj"]
+    dt_lo, b_, c_ = jnp.split(xdb, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_lo @ p["dt_proj"] + p["dt_bias"].astype(xdb.dtype))
+    return dt, b_, c_
+
+
+def _chunk_scan(a, b, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t within a chunk.
+
+    a, b: (B, T, di, n); h0: (B, di, n). Returns (h_all (B,T,di,n), h_last).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = b_c + a_c * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_scan(p, x, cfg: ModelConfig, h0=None, chunk: int = 16):
+    """Selective scan over (B,S,di) post-conv activations. Returns (y, h_last)."""
+    bsz, s, di = x.shape
+    n = cfg.ssm_state_dim
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                   # (di, n)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    if cfg.mamba_impl == "pallas":
+        # fused TPU kernel (see EXPERIMENTS.md §Perf pair 3): keeps the
+        # (chunk, di, n) recurrence tensors in VMEM instead of HBM.
+        from repro.kernels.ssm_scan.ops import ssm_scan
+        dt, b_, c_ = _ssm_params(p, x, cfg)
+        y, h_last = ssm_scan(dt, b_, c_, x, a, h0)
+        y = y + x.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+        return y.astype(x.dtype), h_last
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // c
+    xc = x.reshape(bsz, nc, c, di).transpose(1, 0, 2, 3)           # (nc,B,c,di)
+
+    # §Perf knob: the (B,c,di,n) chunk tensors dominate HBM for hybrid models;
+    # bf16 halves that traffic. The carried state h stays f32 (the recurrence
+    # products are where precision matters across 32k+ steps).
+    chunk_dt = jnp.dtype(cfg.ssm_chunk_dtype)
+
+    def body(h, xcur):
+        dt, b_, c_ = _ssm_params(p, xcur, cfg)                     # (B,c,di),(B,c,n)
+        dt32 = dt.astype(jnp.float32)
+        abar = jnp.exp(dt32[..., None] * a).astype(chunk_dt)       # (B,c,di,n)
+        bu = (dt32[..., None] * b_.astype(jnp.float32)[..., None, :]
+              * xcur.astype(jnp.float32)[..., None]).astype(chunk_dt)
+        h_all, h_last = _chunk_scan(abar, bu, h.astype(chunk_dt))
+        y = jnp.einsum("bcn,bcdn->bcd", c_.astype(chunk_dt), h_all)
+        y = y.astype(jnp.float32) \
+            + xcur.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+        return h_last.astype(jnp.float32), y.astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(body, h0, xc)                        # ys: (nc,B,c,di)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s + pad, di)[:, :s]
+    return y, h_last
+
+
+def mamba_block(p, x, cfg: ModelConfig, state: Tuple = None):
+    """Full block. x: (B,S,d). state = (conv_state, ssm_state) or None (train).
+
+    Returns (y, new_state).
+    """
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    h0 = state[1] if state is not None else None
+    xc, new_conv = _conv1d_causal(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    y, h_last = mamba_scan(p, xc, cfg, h0=h0)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, (new_conv, h_last)
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, state):
+    """x: (B,1,d); state = (conv_state (B,w-1,di), h (B,di,n))."""
+    conv_state, h = state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _conv1d_causal(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)                                           # (B,1,di)
+    dt, b_, c_ = _ssm_params(p, xc, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt32 = dt[:, 0].astype(jnp.float32)                            # (B,di)
+    abar = jnp.exp(dt32[..., None] * a)                            # (B,di,n)
+    bu = dt32[..., None] * b_[:, 0].astype(jnp.float32)[:, None, :] \
+        * xc[:, 0].astype(jnp.float32)[..., None]
+    h_new = abar * h + bu
+    y = jnp.einsum("bn,bdn->bd", c_[:, 0].astype(jnp.float32), h_new)
+    y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv, h_new)

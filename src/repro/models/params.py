@@ -1,0 +1,161 @@
+"""Parameter factories: one init code path, three interpretations.
+
+``RealInit``  -> actual jnp arrays (deterministic per-path RNG folding)
+``AxesOnly``  -> logical-axis tuples mirroring the param tree
+``ShapeOnly`` -> jax.ShapeDtypeStruct leaves (dry-run, no allocation)
+
+plus ``spec_for`` which maps logical axes -> a divisibility-checked
+PartitionSpec under a rule table.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ParamFactory:
+    """Base: subclasses interpret .param() calls."""
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              init: str = "normal", scale: float = 1.0, in_dims: int = 1):
+        raise NotImplementedError
+
+    # scoping ---------------------------------------------------------------
+    def __init__(self):
+        self._path = []
+
+    def scope(self, name: str) -> "_Scope":
+        return _Scope(self, name)
+
+    @property
+    def path(self) -> str:
+        return "/".join(self._path)
+
+
+class WrappedFactory(ParamFactory):
+    """Base for factory decorators — forwards everything by default."""
+
+    def __init__(self, fac: ParamFactory):
+        self.fac = fac
+        self._path = fac._path
+
+    def param(self, name, shape, axes, init="normal", scale=1.0, in_dims=1,
+              fan_in=None):
+        return self.fac.param(name, shape, axes, init=init, scale=scale,
+                              in_dims=in_dims, fan_in=fan_in)
+
+
+class _Scope:
+    def __init__(self, fac: ParamFactory, name: str):
+        self.fac, self.name = fac, name
+
+    def __enter__(self):
+        self.fac._path.append(self.name)
+        return self.fac
+
+    def __exit__(self, *exc):
+        self.fac._path.pop()
+
+
+class RealInit(ParamFactory):
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        super().__init__()
+        self.rng = rng
+        self.dtype = dtype
+
+    def param(self, name, shape, axes, init="normal", scale=1.0, in_dims=1,
+              fan_in=None):
+        assert len(shape) == len(axes), (self.path, name, shape, axes)
+        key = jax.random.fold_in(self.rng, _stable_hash(self.path + "/" + name))
+        if init == "normal":
+            if fan_in is None:
+                fan_in = (int(np.prod(shape[:in_dims])) if len(shape) > 1
+                          else max(shape[-1], 1))
+            std = scale / np.sqrt(fan_in)
+            return (jax.random.normal(key, shape, jnp.float32) * std).astype(self.dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "uniform":  # U[0, scale)
+            return (jax.random.uniform(key, shape, jnp.float32) * scale).astype(self.dtype)
+        if init == "constant":
+            return jnp.full(shape, scale, self.dtype)
+        raise ValueError(init)
+
+
+class AxesOnly(ParamFactory):
+    def param(self, name, shape, axes, init="normal", scale=1.0, in_dims=1,
+              fan_in=None):
+        assert len(shape) == len(axes)
+        return tuple(axes)
+
+
+class ShapeOnly(ParamFactory):
+    def __init__(self, dtype=jnp.bfloat16):
+        super().__init__()
+        self.dtype = dtype
+
+    def param(self, name, shape, axes, init="normal", scale=1.0, in_dims=1,
+              fan_in=None):
+        return jax.ShapeDtypeStruct(shape, self.dtype)
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+# ---------------------------------------------------------------------------
+# logical axes -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Dict[str, Tuple[str, ...]], mesh: Mesh) -> P:
+    """Greedy, divisibility-checked mapping of logical axes to mesh axes.
+
+    ``rules[logical]`` is an ordered tuple of candidates; each candidate is a
+    mesh-axis name or a tuple of names (the dim shards over their product).
+    The first candidate that (a) divides the dim and (b) does not reuse a mesh
+    axis already taken by another dim of this param wins. Dims with no viable
+    candidate stay replicated.
+    """
+    used = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, logical in zip(shape, axes):
+        assigned = None
+        for cand in rules.get(logical, ()):  # type: ignore[arg-type]
+            if cand is None:
+                continue
+            names = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(n in used or n not in sizes for n in names):
+                continue
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if dim % total == 0 and dim >= total:
+                assigned = cand if isinstance(cand, str) else tuple(cand)
+                used.update(names)
+                break
+        out.append(assigned)
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(params_axes, params_shapes, rules, mesh):
+    """Build a NamedSharding pytree parallel to the param tree."""
+    def one(axes, arr):
+        shape = arr.shape if hasattr(arr, "shape") else arr
+        return NamedSharding(mesh, spec_for(tuple(shape), axes, rules, mesh))
+    return jax.tree.map(one, params_axes, params_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))

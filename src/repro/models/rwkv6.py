@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention, chunked.
+
+Recurrence (per head, key-dim N x value-dim N state S):
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ,   w_t = exp(-exp(base + lora(x)))
+
+Training uses a chunk-parallel form: all decay products are expressed as
+exp(non-positive log-sums), so the chunk math is overflow-free by
+construction. Decode is the O(N^2) single-step recurrence (no KV cache at
+all — this is why rwkv6 runs long_500k natively).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamFactory
+
+LORA_DIM = 64
+
+
+def rwkv_heads(cfg: ModelConfig):
+    n = cfg.rwkv_head_dim
+    assert cfg.d_model % n == 0
+    return cfg.d_model // n, n
+
+
+def init_rwkv(fac: ParamFactory, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    with fac.scope("rwkv"):
+        return {
+            # time-mix
+            "mu": fac.param("mu", (5, d), (None, "embed"), init="uniform", scale=1.0),
+            "w_base": fac.param("w_base", (d,), ("embed",), init="constant", scale=0.5),
+            "w_lora_a": fac.param("w_lora_a", (d, LORA_DIM), ("embed", None), scale=0.1),
+            "w_lora_b": fac.param("w_lora_b", (LORA_DIM, d), (None, "embed"), scale=0.1),
+            "u": fac.param("u", (d,), ("embed",), init="uniform", scale=0.5),
+            "wr": fac.param("wr", (d, d), ("embed", "heads_flat")),
+            "wk": fac.param("wk", (d, d), ("embed", "heads_flat")),
+            "wv": fac.param("wv", (d, d), ("embed", "heads_flat")),
+            "wg": fac.param("wg", (d, d), ("embed", "heads_flat")),
+            "wo": fac.param("wo", (d, d), ("heads_flat", "embed")),
+            "ln_x_scale": fac.param("ln_x_scale", (d,), ("embed",), init="ones"),
+            "ln_x_bias": fac.param("ln_x_bias", (d,), ("embed",), init="zeros"),
+            # channel-mix
+            "mu_ck": fac.param("mu_ck", (d,), ("embed",), init="uniform", scale=1.0),
+            "mu_cr": fac.param("mu_cr", (d,), ("embed",), init="uniform", scale=1.0),
+            "ck": fac.param("ck", (d, f), ("embed", "mlp")),
+            "cv": fac.param("cv", (f, d), ("mlp", "embed")),
+            "cr": fac.param("cr", (d, d), ("embed", "heads_flat")),
+        }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}, with ``prev`` (B,d) as x_0 predecessor."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _log_decay(p, xw):
+    """-exp(base + lora(x)) — the per-channel log decay, <= 0."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    z = p["w_base"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return -jnp.exp(jnp.clip(z, -10.0, 3.0))
+
+
+def _wkv_chunk(r, k, v, lw, u, h_in):
+    """One chunk of the WKV recurrence.
+
+    r,k,v,lw: (B,c,H,N) f32; u: (H,N); h_in: (B,H,N,N) [key x value dims].
+    Returns (y (B,c,H,N), h_out).
+    """
+    lp = jnp.cumsum(lw, axis=1)               # lP_t
+    lpm1 = lp - lw                            # lP_{t-1}
+    # intra-chunk pair contributions: E[t,i] = exp(lP_{t-1}[t] - lP[i]) (i<t)
+    diff = lpm1[:, :, None] - lp[:, None, :]  # (B,t,i,H,N); <=0 on the mask
+    c = r.shape[1]
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    e = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+    a = jnp.einsum("bthn,bihn,btihn->bhti", r, k, e)
+    diag = jnp.einsum("bthn,hn,bthn->bth", r, u, k)
+    y = jnp.einsum("bhti,bihn->bthn", a, v)
+    y = y + diag[..., None] * v
+    # contribution of the carried state
+    q = r * jnp.exp(lpm1)
+    y = y + jnp.einsum("bthn,bhnm->bthm", q, h_in)
+    # state update
+    kk = k * jnp.exp(lp[:, -1:, :, :] - lp)   # k_i * exp(lP_T - lP_i), <=0 exp
+    h_out = jnp.exp(lp[:, -1])[..., None] * h_in + jnp.einsum("bthn,bthm->bhnm", kk, v)
+    return y, h_out
+
+
+def wkv_scan(r, k, v, lw, u, h0, chunk: int = 16):
+    """Chunked WKV over full sequences. All inputs (B,S,H,N) f32."""
+    b, s, h, n = r.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        lw = jnp.pad(lw, z)  # log-decay 0 => decay 1 for pad steps (harmless)
+    nc = (s + pad) // c
+
+    def to_chunks(x):
+        return x.reshape(b, nc, c, h, n).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+
+    def body(hcur, xs):
+        rr, kk, vv, ll = xs
+        y, h_new = _wkv_chunk(rr, kk, vv, ll, u, hcur)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(body, h0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, h, n)[:, :s]
+    return y, h_last
+
+
+def _headnorm(p, y, cfg: ModelConfig):
+    """Per-head LayerNorm (RWKV GroupNorm with H groups)."""
+    h, n = rwkv_heads(cfg)
+    b, s = y.shape[:2]
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = ((y32 - mu) ** 2).mean(-1, keepdims=True)
+    yn = (y32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn.reshape(b, s, h * n)
+    return yn * p["ln_x_scale"].astype(jnp.float32) + p["ln_x_bias"].astype(jnp.float32)
+
+
+def time_mix(p, x, cfg: ModelConfig, state):
+    """x: (B,S,d). state=(shift_prev (B,d), h (B,H,N,N)). Returns (y, state)."""
+    h, n = rwkv_heads(cfg)
+    b, s, d = x.shape
+    prev, hstate = state
+    xs = _shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (xs - x) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, s, h, n).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, s, h, n).astype(jnp.float32) * (n ** -0.5)
+    v = (xv @ p["wv"]).reshape(b, s, h, n).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = _log_decay(p, xw).reshape(b, s, h, n)
+    u = p["u"].astype(jnp.float32).reshape(h, n)
+    y, h_new = wkv_scan(r, k, v, lw, u, hstate)
+    y = _headnorm(p, y, cfg).astype(x.dtype) * g
+    return y @ p["wo"], (x[:, -1], h_new)
+
+
+def time_mix_step(p, x, cfg: ModelConfig, state):
+    """Decode: x (B,1,d)."""
+    h, n = rwkv_heads(cfg)
+    b = x.shape[0]
+    prev, hstate = state
+    xs = prev[:, None]
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + mu[i] * (xs - x) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, h, n).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, h, n).astype(jnp.float32) * (n ** -0.5)
+    v = (xv @ p["wv"]).reshape(b, h, n).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(_log_decay(p, xw)).reshape(b, h, n)
+    u = p["u"].astype(jnp.float32).reshape(h, n)
+    # y = r (S + diag(u) k^T v)
+    y = jnp.einsum("bhn,bhnm->bhm", r, hstate) \
+        + jnp.einsum("bhn,hn,bhn->bh", r, u, k)[..., None] * v
+    h_new = w[..., None] * hstate + jnp.einsum("bhn,bhm->bhnm", k, v)
+    y = _headnorm(p, y[:, None], cfg).astype(x.dtype) * g
+    return y @ p["wo"], (x[:, 0], h_new)
+
+
+def channel_mix(p, x, cfg: ModelConfig, prev):
+    """RWKV channel-mix (the FFN). Returns (y, new_prev)."""
+    xs = _shift(x, prev)
+    xk = x + p["mu_ck"].astype(x.dtype) * (xs - x)
+    xr = x + p["mu_cr"].astype(x.dtype) * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"]), x[:, -1]
+
+
+def rwkv_block(p, x, cfg: ModelConfig, state, norm_fn):
+    """Full RWKV layer: ln -> time-mix -> residual -> ln -> channel-mix.
+
+    state = (tm_prev, h, cm_prev). norm_fn(params_key, x) applies the right
+    pre-norm (passed in by the transformer stack, which owns norm params).
+    """
+    tm_prev, hstate, cm_prev = state
+    a, (tm_prev2, h2) = (time_mix_step if x.shape[1] == 1 else time_mix)(
+        p, norm_fn(0, x), cfg, (tm_prev, hstate))
+    x = x + a
+    bmix, cm_prev2 = channel_mix(p, norm_fn(1, x), cfg, cm_prev)
+    x = x + bmix
+    return x, (tm_prev2, h2, cm_prev2)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState, init_optimizer, make_optimizer)
+from repro.optim.fisher import diag_fisher, fisher_precondition  # noqa: F401

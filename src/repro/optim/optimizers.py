@@ -1,0 +1,92 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+``make_optimizer(cfg)`` -> (init_fn, update_fn):
+    state = init_fn(params)
+    new_params, new_state = update_fn(params, grads, state)
+
+Supported: sgd, sgdm, adamw (f32 moments), adamw_bf16 (bf16 moments — the
+memory-feasible choice for 398B-scale FSDP training, see DESIGN.md Sec 6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment (or momentum); None for sgd
+    nu: Any          # second moment; None for sgd/sgdm
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Tuple[Callable, Callable]:
+    name = cfg.name
+    mom_dtype = jnp.bfloat16 if name == "adamw_bf16" else jnp.float32
+
+    def init_fn(params) -> OptState:
+        zeros = lambda: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, mom_dtype), params)
+        if name == "sgd":
+            return OptState(jnp.zeros((), jnp.int32), None, None)
+        if name == "sgdm":
+            return OptState(jnp.zeros((), jnp.int32), zeros(), None)
+        if name in ("adamw", "adamw_bf16"):
+            return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+        raise ValueError(name)
+
+    def update_fn(params, grads, state: OptState):
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state.step + 1
+        if name == "sgd":
+            new = jax.tree.map(
+                lambda p, g: p - cfg.lr * g.astype(p.dtype), params, grads)
+            return new, OptState(step, None, None)
+        if name == "sgdm":
+            mu = jax.tree.map(lambda m, g: (cfg.momentum * m.astype(jnp.float32)
+                                            + g.astype(jnp.float32)).astype(m.dtype),
+                              state.mu, grads)
+            new = jax.tree.map(lambda p, m: p - cfg.lr * m.astype(p.dtype),
+                               params, mu)
+            return new, OptState(step, mu, None)
+        # adamw
+        b1, b2 = cfg.beta1, cfg.beta2
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: (b1 * m.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: (b2 * v.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                                        ).astype(v.dtype), state.nu, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return init_fn, update_fn
+
+
+def init_optimizer(cfg: OptimizerConfig, params) -> OptState:
+    return make_optimizer(cfg)[0](params)

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW, LINK_BW, PEAK_FLOPS, analyze_compiled, model_flops,
+    parse_collectives)

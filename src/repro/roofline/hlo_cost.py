@@ -1,0 +1,427 @@
+"""Static cost model over optimized (partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so scanned layer
+stacks / client loops / flash-attention KV loops are undercounted by their
+trip counts (verified: a scanned 8-step matmul reports 1/8 the unrolled
+FLOPs). This walker re-derives per-device FLOPs, HBM bytes, and collective
+link-bytes by traversing the computation graph and multiplying loop bodies by
+their ``known_trip_count``.
+
+Counting rules
+  * dot: 2 * prod(result dims) * prod(lhs contracting dims)   (MXU)
+  * convolution: 2 * prod(result) * prod(kernel spatial+input-feature)
+  * elementwise / reduce / rng: 1 flop per output (VPU; kept separate)
+  * bytes: per op, operand bytes + result bytes — fusions count only their
+    boundary tensors (internals stay on-chip), mirroring HloCostAnalysis.
+  * collectives: ring-algorithm link bytes (see roofline.analysis), scaled by
+    the enclosing loops' trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.+\s+\{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\]{},\s]+?)\s+"
+    r"([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "partition-id", "replica-id", "iota"}
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "sqrt", "rsqrt", "negate", "abs", "cosine",
+    "sine", "select", "compare", "and", "or", "xor", "clamp", "floor", "ceil",
+    "round-nearest-even", "sign", "atan2", "remainder", "expm1", "log1p",
+    "logistic", "cbrt", "erf", "reduce", "reduce-window", "exponential-minus-one",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_operands(args_str: str) -> List[str]:
+    """Split the operand list at top-level commas (braces/brackets nest)."""
+    parts, depth, cur = [], 0, []
+    for ch in args_str:
+        if ch in "{[(":
+            depth += 1
+        elif ch in "}])":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+# coarse attribution patterns searched in metadata op_name (first match wins)
+BYTE_TAGS = (
+    ("attn_scores", ("bkgqs", "bkgqd", "softmax", "bqkgd")),
+    ("attn_proj", ("dhe->", "dke->", "hed->", "bshe", "bske")),
+    ("moe_dispatch", ("ntke", "ntec", "ntkc", "top_k", "one_hot")),
+    ("moe_expert", ("ecnd", "ecnf", "efd")),
+    ("mamba", ("associative_scan", "bcn,bcdn", "mamba", "conv", "bcdn")),
+    ("rwkv", ("bthn", "bihn", "bhti", "bhnm")),
+    ("optimizer", ("adamw", "opt_update", "sqrt", "multiply_add")),
+    ("embed_logits", ("take", "gather", "unembed", "logsumexp", "exp")),
+)
+
+
+def tag_of(line: str) -> str:
+    m = line.find('op_name="')
+    seg = line[m: m + 400] if m >= 0 else line
+    for tag, pats in BYTE_TAGS:
+        for p in pats:
+            if p in seg:
+                return tag
+    return "other"
+
+
+@dataclass
+class Cost:
+    mxu_flops: float = 0.0
+    vpu_flops: float = 0.0
+    bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    bytes_by_tag: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.mxu_flops += other.mxu_flops * mult
+        self.vpu_flops += other.vpu_flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_link_bytes += other.coll_link_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_tag.items():
+            self.bytes_by_tag[k] = self.bytes_by_tag.get(k, 0.0) + v * mult
+
+
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^()]*\)|[\w\[\]{},]+))")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, num_devices: int):
+        self.num_devices = num_devices
+        self.comps: Dict[str, List[str]] = {}
+        self.types: Dict[str, Dict[str, str]] = {}   # comp -> {op name: type}
+        self.entry: Optional[str] = None
+        self._memo: Dict[str, Cost] = {}
+        self._parse(hlo_text)
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            m = _HEADER_RE.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur = m.group(2)
+                self.comps[cur] = []
+                self.types[cur] = {}
+                if m.group(1):
+                    self.entry = cur
+                # header params: "(p0: f32[...], p1: (f32[...], s32[]))"
+                hdr = line.strip()
+                args = hdr.split("(", 1)[1].rsplit(") ->", 1)[0]
+                for nm, ty in _PARAM_RE.findall(args):
+                    self.types[cur][nm] = ty
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                self.comps[cur].append(line)
+                om = _OP_RE.match(line)
+                if om:
+                    self.types[cur][om.group(1)] = om.group(2)
+
+    def _operand_type(self, comp: str, operand: str) -> str:
+        """Resolve an operand reference to its type string. Operands may be
+        inline-typed ('f32[8] %x') or bare references ('%x')."""
+        operand = operand.strip()
+        if "[" in operand and ("%" not in operand or operand.index("[")
+                               < operand.index("%")):
+            return operand  # inline type
+        name = operand.lstrip("%").split(" ")[0]
+        # strip get-tuple-element style suffixes are not needed; direct lookup
+        t = self.types.get(comp, {}).get(name)
+        return t or ""
+
+    # -- per-op costs -------------------------------------------------------
+    def _op_cost(self, comp: str, line: str, cost: Cost):
+        m = _OP_RE.match(line)
+        if not m:
+            return None
+        _, result_type, opcode = m.groups()
+        # operand segment: inside the first top-level parens after opcode
+        try:
+            args = line.split(opcode + "(", 1)[1]
+            depth, end = 1, 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            args = args[:end]
+        except IndexError:
+            args = ""
+        operands = _split_operands(args)
+
+        if opcode == "dot":
+            out_elems = 1
+            for _, dims in _shapes_of(result_type):
+                for d in dims:
+                    out_elems *= d
+            lhs_t = self._operand_type(comp, operands[0]) if operands else ""
+            lhs_shapes = _shapes_of(lhs_t)
+            lhs = lhs_shapes[0][1] if lhs_shapes else []
+            cm = _LHS_CONTRACT_RE.search(line)
+            k = 1
+            if cm and lhs:
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs):
+                        k *= lhs[int(idx)]
+            cost.mxu_flops += 2.0 * out_elems * k
+        elif opcode == "convolution":
+            out_elems = 1
+            for _, dims in _shapes_of(result_type):
+                for d in dims:
+                    out_elems *= d
+            ker_t = (self._operand_type(comp, operands[1])
+                     if len(operands) > 1 else "")
+            ker = _shapes_of(ker_t)
+            if ker:
+                kelems = 1
+                for _, dims in ker:
+                    for d in dims:
+                        kelems *= d
+                # 2 * out * (kernel elems / out_features): approximate
+                rs = _shapes_of(result_type)
+                of = rs[0][1][-1] if rs and rs[0][1] else 1
+                cost.mxu_flops += 2.0 * out_elems * max(kelems // max(of, 1), 1)
+        elif opcode in _ELEMENTWISE_FLOPS:
+            out_elems = 1
+            for _, dims in _shapes_of(result_type):
+                for d in dims:
+                    out_elems *= d
+            cost.vpu_flops += float(out_elems)
+
+        if opcode not in _SKIP_BYTES and opcode != "fusion":
+            if opcode == "dynamic-slice":
+                # reads only the slice; result is the slice
+                b = 2 * _type_bytes(result_type)
+            elif opcode == "dynamic-update-slice":
+                # in-place: reads + writes only the update slice
+                upd = (self._operand_type(comp, operands[1])
+                       if len(operands) > 1 else "")
+                b = 2 * _type_bytes(upd)
+            else:
+                b = _type_bytes(result_type)
+                for o in operands:
+                    b += _type_bytes(self._operand_type(comp, o))
+            cost.bytes += b
+            t = tag_of(line)
+            cost.bytes_by_tag[t] = cost.bytes_by_tag.get(t, 0.0) + b
+
+        if opcode.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                opcode in _COLLECTIVES or opcode.replace("-start", "") in _COLLECTIVES:
+            kind = opcode.replace("-start", "").replace("-done", "")
+            if kind in _COLLECTIVES and not opcode.endswith("-done"):
+                n = self._participants(line)
+                b = _type_bytes(result_type)
+                if kind == "all-reduce":
+                    link = 2 * (n - 1) * b
+                elif kind == "all-gather":
+                    link = (n - 1) * b
+                elif kind == "reduce-scatter":
+                    link = (n - 1) * b * n
+                elif kind == "all-to-all":
+                    link = (n - 1) * b
+                else:
+                    link = n * b
+                groups = max(self.num_devices // max(n, 1), 1)
+                cost.coll_link_bytes += float(link * groups)
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0.0) \
+                    + float(link * groups)
+                cost.coll_counts[kind] = cost.coll_counts.get(kind, 0.0) + 1
+
+        return opcode, line
+
+    def _participants(self, line: str) -> int:
+        m = _GROUPS_V2_RE.search(line)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_RE.search(line)
+        if m:
+            return max(len(m.group(1).split(",")), 1)
+        return self.num_devices
+
+    def _root_of(self, callee: str) -> Optional[Tuple[str, str]]:
+        """(opcode, line) of a computation's ROOT op."""
+        for line in reversed(self.comps.get(callee, ())):
+            if "ROOT" in line:
+                m = _OP_RE.match(line)
+                if m:
+                    return m.group(3), line
+        return None
+
+    def _fusion_bytes(self, comp: str, line: str, callee: Optional[str]) -> float:
+        """HBM traffic of a fusion op — boundary tensors, with in-place
+        slice-update fusions counted at their UPDATE size (not the full
+        aliased buffer: a scan's ys-stacking DUS writes one slice/iter)."""
+        m = _OP_RE.match(line)
+        result_type = m.group(2)
+        try:
+            args = line.split(m.group(3) + "(", 1)[1]
+            depth, end = 1, 0
+            for i, ch in enumerate(args):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _split_operands(args[:end])
+        except IndexError:
+            operands = []
+        root = self._root_of(callee) if callee else None
+        res_b = _type_bytes(result_type)
+        op_bytes = [_type_bytes(self._operand_type(comp, o)) for o in operands]
+        # in-place slice-update fusions (any DUS in the callee writing a
+        # buffer of the fusion's result type): count the UPDATE, not the
+        # aliased accumulator — a scan's ys-stacking writes one slice/iter.
+        dus_upd = self._dus_update_bytes(callee, res_b) if callee else None
+        if dus_upd is not None:
+            small = sum(b for b in op_bytes if b < res_b)
+            return float(2 * dus_upd + small)
+        if root and root[0] == "dynamic-slice":
+            small = sum(b for b in op_bytes if b < res_b)
+            return float(2 * res_b + small)
+        return float(res_b + sum(op_bytes))
+
+    def _dus_update_bytes(self, callee: str, res_b: int) -> Optional[float]:
+        """If the callee contains a dynamic-update-slice whose target is as
+        large as the fusion result, return the update operand's bytes."""
+        for line in self.comps.get(callee, ()):
+            if "dynamic-update-slice(" not in line:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            if _type_bytes(m.group(2)) < res_b:
+                continue  # small internal DUS, not the accumulator
+            rargs = line.split("dynamic-update-slice(", 1)[-1]
+            rops = _split_operands(rargs.split("), ")[0].rstrip(") "))
+            if len(rops) > 1:
+                upd = self._operand_type(callee, rops[1])
+                return float(_type_bytes(upd))
+        return None
+
+    # -- per-computation ----------------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        cost = Cost()
+        for line in self.comps.get(name, ()):
+            parsed = self._op_cost(name, line, cost)
+            if parsed is None:
+                continue
+            opcode, full = parsed
+            if opcode == "fusion":
+                cm = _CALLS_RE.search(full)
+                callee = cm.group(1) if cm else None
+                if callee in self.comps:
+                    sub = self.comp_cost(callee)
+                    # fusions: inherit compute, NOT bytes (on-chip internals)
+                    cost.mxu_flops += sub.mxu_flops
+                    cost.vpu_flops += sub.vpu_flops
+                    cost.coll_link_bytes += sub.coll_link_bytes
+                b = self._fusion_bytes(name, full, callee)
+                cost.bytes += b
+                t = tag_of(full)
+                cost.bytes_by_tag[t] = cost.bytes_by_tag.get(t, 0.0) + b
+            elif opcode == "while":
+                bm = _BODY_RE.search(full)
+                tm = _TRIP_RE.search(full)
+                trips = float(tm.group(1)) if tm else 1.0
+                if bm and bm.group(1) in self.comps:
+                    cost.add(self.comp_cost(bm.group(1)), trips)
+            elif opcode == "conditional":
+                bm = _BRANCH_RE.search(full)
+                if bm:
+                    for cname in bm.group(1).split(","):
+                        cname = cname.strip().lstrip("%")
+                        if cname in self.comps:
+                            cost.add(self.comp_cost(cname), 1.0)
+            elif opcode in ("call", "async-start"):
+                cm = _APPLY_RE.search(full) or _CALLS_RE.search(full)
+                if cm and cm.group(1) in self.comps:
+                    cost.add(self.comp_cost(cm.group(1)), 1.0)
+            # reduce/sort/map to_apply bodies: per-element scalar computations,
+            # approximated by the vpu count above; skip descending.
+        self._memo[name] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo_text(hlo_text: str, num_devices: int) -> Dict:
+    model = HloCostModel(hlo_text, num_devices)
+    c = model.entry_cost()
+    return {
+        "mxu_flops_per_device": c.mxu_flops,
+        "vpu_flops_per_device": c.vpu_flops,
+        "bytes_per_device": c.bytes,
+        "bytes_by_tag": c.bytes_by_tag,
+        "collective_bytes_total": c.coll_link_bytes,
+        "collective_bytes_by_kind": c.coll_by_kind,
+        "collective_op_counts": {k: int(v) for k, v in c.coll_counts.items()},
+    }

@@ -1,0 +1,151 @@
+"""Render EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+ARCH_ORDER = ("granite-moe-1b-a400m", "internvl2-2b", "granite-moe-3b-a800m",
+              "jamba-1.5-large-398b", "gemma3-27b", "whisper-tiny", "olmo-1b",
+              "yi-6b", "llama3.2-3b", "rwkv6-3b")
+
+
+def load(mesh: str = "16x16", tag: str = "") -> dict:
+    out = {}
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}{tag}.json")):
+        if not f.stem.endswith(f"_{mesh}{tag}"):
+            continue  # e.g. *_16x16 glob also matches *_2x16x16
+        rec = json.loads(f.read_text())
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS/HLO | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | missing |")
+                continue
+            if r["status"] != "ok":
+                note = (r.get("notes") or [r.get("error", "")])[0][:50]
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | "
+                             f"{r['status']}: {note} |")
+                continue
+            rf = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(rf['compute_s'])} | "
+                f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+                f"{rf['dominant'].replace('_s', '')} | "
+                f"{ratio:.2f} | ok |" if ratio is not None else
+                f"| {arch} | {shape} | {_fmt_s(rf['compute_s'])} | "
+                f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+                f"{rf['dominant'].replace('_s', '')} | - | ok |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | args/dev | temp/dev | HLO GFLOPs/dev | "
+        "HLO GB/dev | coll GB total | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None or r["status"] != "ok":
+                status = "missing" if r is None else r["status"]
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | {status} |")
+                continue
+            mem = r.get("memory_analysis") or {}
+            args = mem.get("argument_size_in_bytes", 0) / 2**30
+            temp = mem.get("temp_size_in_bytes", 0) / 2**30
+            gf = r.get("hlo_flops_per_device", 0) / 1e9
+            gb = r.get("hlo_bytes_per_device", 0) / 2**30
+            cb = r.get("collective_bytes_total", 0) / 2**30
+            counts = r.get("collective_op_counts", {})
+            top = ",".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                           for k, v in sorted(counts.items(),
+                                              key=lambda kv: -kv[1]) if v)[:48]
+            lines.append(f"| {arch} | {shape} | {args:.2f}G | {temp:.2f}G | "
+                         f"{gf:,.0f} | {gb:.1f} | {cb:,.0f} | {top} |")
+    return "\n".join(lines)
+
+
+def multipod_status(recs_sp: dict, recs_mp: dict) -> str:
+    lines = ["| arch | shape | 16x16 | 2x16x16 |", "|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            a = recs_sp.get((arch, shape))
+            b = recs_mp.get((arch, shape))
+            sa = a["status"] if a else "missing"
+            sb = b["status"] if b else "missing"
+            lines.append(f"| {arch} | {shape} | {sa} | {sb} |")
+    return "\n".join(lines)
+
+
+def delta_table(base: dict, opt: dict) -> str:
+    """Baseline vs optimized, per (arch, shape) where both exist."""
+    lines = [
+        "| arch | shape | term | baseline | optimized | delta |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            b, o = base.get((arch, shape)), opt.get((arch, shape))
+            if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+                continue
+            br, orr = b["roofline"], o["roofline"]
+            for term in ("compute_s", "memory_s", "collective_s"):
+                if br[term] <= 0:
+                    continue
+                d = (orr[term] - br[term]) / br[term]
+                if abs(d) < 0.02 and term != br["dominant"]:
+                    continue
+                mark = " **dom**" if term == br["dominant"] else ""
+                lines.append(
+                    f"| {arch} | {shape} | {term.replace('_s','')}{mark} | "
+                    f"{_fmt_s(br[term])} | {_fmt_s(orr[term])} | {d:+.1%} |")
+    return "\n".join(lines)
+
+
+def main():
+    sp = load("16x16")
+    opt = load("16x16", tag="_opt")
+    mp = load("2x16x16")
+    print("## Single-pod roofline — BASELINE (paper-faithful) (16x16)\n")
+    print(roofline_table(sp))
+    if opt:
+        print("\n## Single-pod roofline — OPTIMIZED (§Perf profile) (16x16)\n")
+        print(roofline_table(opt))
+        print("\n## Baseline -> optimized deltas (changed terms)\n")
+        print(delta_table(sp, opt))
+    print("\n## Dry-run detail (16x16, baseline)\n")
+    print(dryrun_table(sp))
+    print("\n## Multi-pod lowering status\n")
+    print(multipod_status(sp, mp))
+
+
+if __name__ == "__main__":
+    main()

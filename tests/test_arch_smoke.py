@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=256, <=4 experts) runs one forward and one train step on
+CPU; output shapes and finiteness are asserted. The FULL configs are exercised
+only via the dry-run (see launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
+from repro.models import (abstract_params, decode_fn, init_cache, init_params,
+                          loss_fn, num_params, param_axes, prefill_fn)
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    r1, r2 = jax.random.split(jax.random.key(rng))
+    batch = {
+        "tokens": jax.random.randint(r1, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(r2, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(r1, (B, cfg.vision_tokens, cfg.d_model),
+                                             jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(r1, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(1))
+    batch = _batch(cfg, 0)
+    lf = loss_fn(cfg)
+
+    loss, metrics = jax.jit(lf)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss {loss}"
+
+    grads = jax.jit(jax.grad(lambda p, b: lf(p, b)[0]))(params, batch)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: non-finite grad norm"
+    # one SGD step changes the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2, _ = jax.jit(lf)(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_param_axes_structure(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    axes = param_axes(cfg)
+    shapes = abstract_params(cfg)
+    ax_leaves = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    sh_leaves = jax.tree.leaves(shapes)
+    assert len(ax_leaves) == len(sh_leaves)
+    for a, s in zip(ax_leaves, sh_leaves):
+        assert len(a) == len(s.shape), f"{arch}: axes {a} vs shape {s.shape}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(1))
+    batch = _batch(cfg, 0)
+    pf = prefill_fn(cfg)
+    logits, cache = jax.jit(pf)(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), f"{arch}: prefill NaN"
+
+    df = decode_fn(cfg)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    logits2, cache2 = jax.jit(df)(params, tok, cache)
+    v_padded = logits2.shape[-1]
+    assert logits2.shape[:2] == (B, 1) and v_padded >= cfg.vocab_size
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32))), f"{arch}: decode NaN"
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-27b", "rwkv6-3b",
+                                  "jamba-1.5-large-398b"])
+def test_multi_token_decode_matches_forward(arch):
+    """Property: N sequential decode steps after prefill reproduce the full
+    forward's logits at every step — exercises cache headroom, ring buffers
+    (gemma local layers), and SSM/RWKV state continuity."""
+    import dataclasses
+    from repro.models import predict_fn
+    n_gen = 4
+    # capacity-based MoE drops depend on the token-group size, which differs
+    # between prefill and decode by construction; unbind capacity so the test
+    # checks the cache/state logic, not the (documented) drop semantics.
+    cfg = dataclasses.replace(reduce_for_smoke(get_config(arch)),
+                              moe_capacity_factor=16.0)
+    params = init_params(cfg, jax.random.key(5))
+    s_total = 48 + n_gen
+    toks = jax.random.randint(jax.random.key(6), (B, s_total), 0, cfg.vocab_size)
+    full_batch = _batch(cfg, 0)
+    full_batch["tokens"] = toks
+    full_batch["labels"] = toks
+    if cfg.family == "audio":
+        full_batch["frames"] = jnp.zeros((B, 32, cfg.d_model), jnp.float32)
+    full_logits = jax.jit(predict_fn(cfg))(params, full_batch)
+
+    pre_batch = dict(full_batch)
+    pre_batch["tokens"] = toks[:, :48]
+    pre_batch["labels"] = toks[:, :48]
+    _, cache = jax.jit(prefill_fn(cfg, max_len=s_total))(params, pre_batch)
+    df = jax.jit(decode_fn(cfg))
+    for i in range(n_gen):
+        lg, cache = df(params, toks[:, 48 + i: 49 + i], cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, 48 + i], np.float32),
+            rtol=5e-3, atol=5e-3,
+            err_msg=f"{arch}: decode step {i} diverged from full forward")
+
+
+def test_decode_matches_prefill_continuation():
+    """Property: decoding token t+1 after prefill(t) == prefill(t+1) logits."""
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    params = init_params(cfg, jax.random.key(3))
+    toks = jax.random.randint(jax.random.key(4), (B, S + 1), 0, cfg.vocab_size)
+    b_full = {"tokens": toks, "labels": toks}
+    b_pre = {"tokens": toks[:, :S], "labels": toks[:, :S]}
+    lg_full, _ = jax.jit(prefill_fn(cfg))(params, b_full)
+    _, cache = jax.jit(prefill_fn(cfg, max_len=S + 1))(params, b_pre)
+    lg_dec, _ = jax.jit(decode_fn(cfg))(params, toks[:, S:], cache)
+    np.testing.assert_allclose(np.asarray(lg_full[:, -1], np.float32),
+                               np.asarray(lg_dec[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,122 @@
+"""Coded-computing tests: exact reconstruction, erasure tolerance, error
+correction (Berlekamp-Welch), pytree round-trips, property-based sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding
+
+
+def _scheme(c, s):
+    return coding.CodingScheme(num_shards=s, num_clients=c)
+
+
+class TestEncodeDecode:
+    def test_roundtrip_exact(self):
+        sch = _scheme(20, 4)
+        w = jnp.asarray(np.random.default_rng(0).standard_normal((4, 257)),
+                        jnp.float32)
+        slices = coding.encode(sch, w)
+        assert slices.shape == (20, 257)
+        out = coding.decode_erasure(sch, slices, list(range(20)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_any_s_subset_suffices(self):
+        sch = _scheme(12, 3)
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+        slices = coding.encode(sch, w)
+        for _ in range(5):
+            ids = sorted(rng.choice(12, size=3, replace=False).tolist())
+            out = coding.decode_erasure(sch, slices[jnp.asarray(ids)], ids)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_vandermonde_matches_paper_eq7(self):
+        """The paper's literal pseudo-inverse decode agrees at small C."""
+        sch = _scheme(8, 3)
+        w = jnp.asarray(np.random.default_rng(2).standard_normal((3, 33)),
+                        jnp.float32)
+        slices = coding.encode(sch, w)
+        out = coding.decode_vandermonde(sch, slices)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_storage_at_c100(self):
+        """Paper scale: C=100 clients, S=4 shards — f32-stable decode."""
+        sch = _scheme(100, 4)
+        w = jnp.asarray(np.random.default_rng(3).standard_normal((4, 128)),
+                        jnp.float32)
+        slices = coding.encode(sch, w)
+        ids = list(range(0, 100, 25))  # any 4 slices
+        out = coding.decode_erasure(sch, slices[jnp.asarray(ids)], ids)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=5e-3, atol=5e-3)
+
+
+class TestErrors:
+    def test_error_localization_and_decode(self):
+        sch = _scheme(16, 4)
+        rng = np.random.default_rng(4)
+        w = jnp.asarray(rng.standard_normal((4, 96)), jnp.float32)
+        slices = np.array(coding.encode(sch, w))  # writable copy
+        bad_true = [3, 11]
+        slices[bad_true] += rng.standard_normal((2, 96)) * 5.0
+        out, bad = coding.decode_with_errors(sch, jnp.asarray(slices))
+        assert set(bad.tolist()) == set(bad_true)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_no_error_fast_path(self):
+        sch = _scheme(10, 3)
+        w = jnp.asarray(np.random.default_rng(5).standard_normal((3, 40)),
+                        jnp.float32)
+        slices = coding.encode(sch, w)
+        out, bad = coding.decode_with_errors(sch, slices)
+        assert bad.size == 0
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_max_errors_eq11(self):
+        assert _scheme(20, 4).max_errors == 8   # (C-S)/2
+        assert _scheme(100, 4).max_errors == 48
+
+
+class TestPytrees:
+    def test_pytree_roundtrip(self):
+        rng = jax.random.key(0)
+        trees = []
+        for s in range(3):
+            k = jax.random.fold_in(rng, s)
+            trees.append({
+                "a": jax.random.normal(k, (7, 5), jnp.float32),
+                "b": {"c": jax.random.normal(k, (11,), jnp.float32)},
+            })
+        sch = _scheme(9, 3)
+        slices, specs = coding.encode_pytrees(sch, trees)
+        out = coding.decode_pytrees(sch, slices[jnp.asarray([1, 4, 8])],
+                                    [1, 4, 8], specs)
+        for t, o in zip(trees, out):
+            for la, lb in zip(jax.tree.leaves(t), jax.tree.leaves(o)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(4, 40), s=st.integers(2, 6), p=st.integers(1, 50),
+       seed=st.integers(0, 100))
+def test_property_roundtrip(c, s, p, seed):
+    """Property: for any C>=S, encode->erasure-decode is identity (f32 tol)."""
+    if c < s:
+        c = s
+    sch = _scheme(c, s)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((s, p)), jnp.float32)
+    slices = coding.encode(sch, w)
+    ids = sorted(rng.choice(c, size=s, replace=False).tolist())
+    out = coding.decode_erasure(sch, slices[jnp.asarray(ids)], ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                               rtol=2e-2, atol=2e-2)
