@@ -45,7 +45,8 @@ def run(sc: Scale):
     # modelled scaling curves (paper Fig. 5c/d) ------------------------------
     sim, _ = build_image_sim(sc, iid=True)
     record = sim.train_stage(store_kind="full")
-    mb = tree_bytes(next(iter(record.store._data.values())))
+    c0 = record.store.clients_at(0)[0]
+    mb = tree_bytes(record.store.get(0, c0))
     for c in (20, 40, 60, 80, 100):
         for mech in ("full", "uncoded", "coded"):
             b = theory.storage_bytes(mb, c, sc.num_shards, sc.global_rounds,

@@ -1,0 +1,59 @@
+"""Round-engine A/B: stage-training throughput, fused stacked path vs the
+seed per-client path (same model, data, store kind, and RNG protocol).
+
+The fused engine keeps client parameters stacked on device end-to-end: one
+jitted ``shard_round`` per (shard, round) that folds in FedAvg and the update
+norms, stored-norm fetch once per stage, flatten-once coded puts, and all G
+round encodes batched into one coded matmul. The legacy engine is the seed
+loop: per-client unstack, ``float(tree_norm(...))`` per (shard, round,
+client), and a per-round re-flatten + encode.
+
+Emits per-engine stage wall time and rounds/s, the fused/legacy speedup, and
+the SE unlearning wall time (whose calibration now also runs stacked). Two
+regimes are measured: the paper-protocol scale ``sc`` (local-SGD
+compute-bound — the engine win is bounded by the training floor) and a
+large-C bookkeeping-bound variant (4x the clients per round, half the local
+epochs) where the per-client history handling the engine eliminates is a
+first-order cost — the ROADMAP's large-fleet regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Scale, build_image_sim, emit, timed
+
+
+def _ab(sc: Scale, tag: str):
+    stage_us = {}
+    for engine in ("legacy", "fused"):
+        sim, _ = build_image_sim(sc, iid=True)
+        # warm the jit caches so the A/B measures steady-state round time
+        sim.train_stage(store_kind="coded", rounds=1, engine=engine)
+        record, us = timed(sim.train_stage, store_kind="coded", engine=engine)
+        stage_us[engine] = us
+        rounds_per_s = sc.global_rounds / (us / 1e6)
+        emit(f"fig6_stage_train_{engine}{tag}", us,
+             f"G={sc.global_rounds};S={sc.num_shards};"
+             f"M={sc.clients_per_round};L={sc.local_epochs};"
+             f"rounds_per_s={rounds_per_s:.2f}")
+        victim = record.plan.shard_clients[0][0]
+        res = sim.unlearn("SE", record, [victim])
+        emit(f"fig6_unlearn_SE_{engine}_record{tag}", res.wall_time * 1e6,
+             f"calibrated retraining wall;cost={res.cost_units:.0f}")
+    emit(f"fig6_round_engine_speedup{tag}", 0.0,
+         f"fused_vs_legacy={stage_us['legacy'] / stage_us['fused']:.2f}x")
+
+
+def run(sc: Scale):
+    _ab(sc, "")
+    if sc.clients_per_round >= 12:      # skip the heavy pass under --fast
+        large_c = dataclasses.replace(
+            sc, clients_per_round=4 * sc.clients_per_round,
+            num_clients=max(sc.num_clients, 4 * sc.clients_per_round + 16),
+            local_epochs=max(sc.local_epochs // 2, 1),
+            samples_per_client=max(sc.samples_per_client // 2, 20))
+        _ab(large_c, "_largeC")
+
+
+if __name__ == "__main__":                 # PYTHONPATH=src python -m benchmarks.fig6_round_engine
+    run(Scale())

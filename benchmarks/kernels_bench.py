@@ -21,13 +21,17 @@ from repro.kernels.window_attn.ref import window_attention_ref
 
 
 def _time(fn, *args, iters: int = 3) -> float:
+    """Median of per-iteration wall times (robust to scheduler noise in
+    shared/containerized environments)."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
 
 
 def run(_sc=None):
@@ -73,6 +77,54 @@ def run(_sc=None):
                                                     ids), slices)
     emit("coding_encode_e2e", enc_us, "C=100;S=4;P=5e5")
     emit("coding_decode_e2e", dec_us, "any-4-of-100 slices")
+
+    # bf16 coded-slice storage (half the client bytes, one extra cast)
+    emit("coding_encode_bf16",
+         _time(lambda m: coding.encode(sch, m, out_dtype=jnp.bfloat16), wmat),
+         "C=100;S=4;P=5e5;bf16-slices")
+
+    # batched multi-round encode: G eager per-round encodes (each rebuilding
+    # the coefficient matrix + one dispatch) vs ONE jitted multi-round
+    # program — the paper's G=30 history setting
+    g_rounds = 30
+    mats = [jnp.asarray(rng.standard_normal((4, 20_000)), jnp.float32)
+            for _ in range(g_rounds)]
+
+    def encode_per_round(ms):
+        return [coding.encode(sch, m) for m in ms]
+
+    per_us = _time(encode_per_round, mats, iters=10)
+    bat_us = _time(lambda ms: coding.encode_batched(sch, ms), mats, iters=10)
+    emit("coding_encode_per_round", per_us, f"G={g_rounds};C=100;S=4;P=2e4")
+    emit("coding_encode_batched", bat_us,
+         f"G={g_rounds} rounds one dispatch;speedup={per_us / bat_us:.2f}x")
+
+    # fused encode->decode round-trip (slice verification path): two full
+    # passes vs the precomposed (S,S) operator (kernel path: D@(B@w) tiles)
+    ed_two = _time(lambda m: coding.decode_erasure(
+        sch, coding.encode(sch, m), list(range(100))), wmat, iters=10)
+    ed_fused = _time(lambda m: coding.encode_decode(sch, m), wmat, iters=10)
+    emit("coding_encode_decode_two_pass", ed_two, "C=100;S=4;P=5e5")
+    emit("coding_encode_decode_fused", ed_fused,
+         f"(D@B)@w one pass;speedup={ed_two / ed_fused:.2f}x")
+
+    # stacked pytree flatten: one (M, P) pass vs M per-tree flattens
+    m_clients = 20
+    key = jax.random.key(0)
+    stacked = {f"layer{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                              (m_clients, 64, 100), jnp.float32)
+               for i in range(8)}
+    per_trees = [jax.tree.map(lambda a, i=i: a[i], stacked)
+                 for i in range(m_clients)]
+
+    def flatten_per_tree(trees):
+        return jnp.stack([coding.tree_to_flat(t)[0] for t in trees])
+
+    flat_per_us = _time(flatten_per_tree, per_trees, iters=10)
+    flat_stk_us = _time(lambda t: coding.tree_to_flat_stacked(t)[0], stacked, iters=10)
+    emit("coding_flatten_per_tree", flat_per_us, f"M={m_clients};8 leaves;P=5e5")
+    emit("coding_flatten_stacked", flat_stk_us,
+         f"one-pass (M,P);speedup={flat_per_us / flat_stk_us:.2f}x")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,19 @@ def tree_bytes(tree) -> int:
 
 
 @dataclass
+class _StackedRow:
+    """Lazy reference to row ``idx`` of a stacked (M, ...) parameter pytree —
+    lets the uncoded stores accept device-resident stacked batches without a
+    per-client unstack in the training hot loop; the row is materialized only
+    if actually retrieved (unlearning preparation)."""
+    stacked: object
+    idx: int
+
+    def materialize(self):
+        return jax.tree.map(lambda a, i=self.idx: a[i], self.stacked)
+
+
+@dataclass
 class StoreStats:
     server_bytes: int = 0
     client_bytes: int = 0
@@ -53,8 +66,22 @@ class FullStore:
             self.stats.server_bytes += b
             self.stats.comm_bytes_store += b
 
+    def put_round_stacked(self, rnd: int, shard_batches: Dict[int, Tuple[
+            List[int], object]]):
+        """Stacked fast path: ``{shard: (client_ids, stacked (M, ...) tree)}``.
+        No per-client unstack per round — rows materialize lazily on get()."""
+        for _s, (clients, stacked) in shard_batches.items():
+            b_each = tree_bytes(stacked) // max(len(clients), 1)
+            for i, c in enumerate(clients):
+                self._data[(rnd, c)] = _StackedRow(stacked, i)
+                self.stats.server_bytes += b_each
+                self.stats.comm_bytes_store += b_each
+
     def get(self, rnd: int, client: int):
         p = self._data[(rnd, client)]
+        if isinstance(p, _StackedRow):
+            p = p.materialize()
+            self._data[(rnd, client)] = p
         self.stats.comm_bytes_retrieve += tree_bytes(p)
         return p
 
@@ -80,6 +107,16 @@ class UncodedShardStore(FullStore):
             self.stats.comm_bytes_store += b
         self.stats.server_bytes = max(self._per_shard.values(), default=0)
 
+    def put_round_stacked(self, rnd: int, shard_batches: Dict[int, Tuple[
+            List[int], object]]):
+        for s, (clients, stacked) in shard_batches.items():
+            b = tree_bytes(stacked)
+            self._per_shard[s] = self._per_shard.get(s, 0) + b
+            self.stats.comm_bytes_store += b
+            for i, c in enumerate(clients):
+                self._data[(rnd, c)] = _StackedRow(stacked, i)
+        self.stats.server_bytes = max(self._per_shard.values(), default=0)
+
 
 class CodedStore:
     """Lagrange-coded distributed store (paper Sec 3.3).
@@ -91,13 +128,18 @@ class CodedStore:
     """
 
     def __init__(self, scheme: coding.CodingScheme,
-                 shard_clients: Dict[int, List[int]], use_kernel: bool = False):
+                 shard_clients: Dict[int, List[int]], use_kernel: bool = False,
+                 slice_dtype=None, group_rounds: int = 1):
         self.scheme = scheme
         self.shard_clients = {s: list(cs) for s, cs in shard_clients.items()}
         self.use_kernel = use_kernel
+        self.slice_dtype = slice_dtype        # e.g. bf16 coded slices
+        self.group_rounds = max(int(group_rounds), 1)
         self._slices: Dict[int, jnp.ndarray] = {}    # round -> (C, P)
         self._specs: Dict[int, tuple] = {}
         self._layouts: Dict[int, list] = {}          # round -> client order per shard
+        self._pending: List[Tuple[int, jnp.ndarray]] = []   # deferred rounds
+        self._row_layout = None               # cached flat-path geometry
         self.stats = StoreStats()
         self.stats.server_bytes = 16 * scheme.num_clients  # the keys
 
@@ -114,6 +156,57 @@ class CodedStore:
         self._slices[rnd] = slices
         self._specs[rnd] = specs
         self._layouts[rnd] = layout
+        self._account_stored(slices)
+
+    def put_round_flat(self, rnd: int, shard_flats: Dict[int, jnp.ndarray],
+                       row_spec):
+        """Fast path for the fused round engine: per-shard *stacked, already
+        flat* ``(M_s, P)`` client-parameter matrices (from
+        ``coding.tree_to_flat_stacked`` inside the jitted round step).
+
+        The per-shard vector is the client-major ``reshape(-1)`` of the
+        stacked matrix — bit-identical to the tree path's concat of per-client
+        flats. Re-assembly specs and padding geometry are computed ONCE per
+        stage (not re-flattened per client per round), and the Lagrange encode
+        itself is deferred and batched ``group_rounds`` rounds at a time into
+        a single (S, G*P) coded matmul (see ``flush``).
+        """
+        if self._row_layout is None:
+            layout, specs, lens = [], [], []
+            for s in sorted(self.shard_clients):
+                cs = list(self.shard_clients[s])
+                f = shard_flats[s]
+                assert f.shape[0] == len(cs), (s, f.shape, cs)
+                layout.append((s, cs))
+                specs.append(coding.StackedRowSpec(tuple(cs),
+                                                   int(f.shape[1]), row_spec))
+                lens.append(int(f.shape[0]) * int(f.shape[1]))
+            self._row_layout = (layout, tuple(specs), max(lens))
+        layout, specs, pmax = self._row_layout
+        rows = [shard_flats[s].reshape(-1) for s, _ in layout]
+        w = jnp.stack([r if r.shape[0] == pmax else jnp.pad(r, (0, pmax - r.shape[0]))
+                       for r in rows])
+        self._layouts[rnd] = layout
+        self._specs[rnd] = specs
+        self._pending.append((rnd, w))
+        if len(self._pending) >= self.group_rounds:
+            self.flush()
+
+    def flush(self):
+        """Encode all deferred rounds in one batched coded matmul."""
+        if not self._pending:
+            return
+        rounds = [r for r, _ in self._pending]
+        mats = [w for _, w in self._pending]
+        self._pending = []
+        coded = coding.encode_batched(self.scheme, mats,
+                                      use_kernel=self.use_kernel,
+                                      out_dtype=self.slice_dtype)
+        for rnd, slices in zip(rounds, coded):
+            self._slices[rnd] = slices
+            self._account_stored(slices)
+
+    def _account_stored(self, slices: jnp.ndarray):
         p = slices.shape[1]
         self.stats.client_bytes += int(slices.size * slices.dtype.itemsize)
         # distribution traffic: every client receives its slice
@@ -130,6 +223,8 @@ class CodedStore:
         ``corrupt``: optional (C,P)-shaped noise to model erroneous slices —
         triggers the error-correcting decode path.
         """
+        if rnd not in self._slices:
+            self.flush()                      # materialize deferred encodes
         slices = self._slices[rnd]
         c = self.scheme.num_clients
         if corrupt is not None:
@@ -141,15 +236,17 @@ class CodedStore:
             w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)], ids,
                                       use_kernel=self.use_kernel)
         self.stats.comm_bytes_retrieve += int(
-            self.scheme.num_shards * slices.shape[1] * 4)
+            self.scheme.num_shards * slices.shape[1] * slices.dtype.itemsize)
         self.stats.decode_flops += 2 * self.scheme.num_shards ** 2 * slices.shape[1]
         # reassemble the requested shard's {client: tree}
         layout = self._layouts[rnd]
         specs = self._specs[rnd]
         for idx, (s, cs) in enumerate(layout):
             if s == shard:
-                tree = coding.flat_to_tree(w[idx], specs[idx])
-                return tree
+                spec = specs[idx]
+                if isinstance(spec, coding.StackedRowSpec):
+                    return coding.flat_to_client_trees(w[idx], spec)
+                return coding.flat_to_tree(w[idx], spec)
         raise KeyError(f"shard {shard} not stored at round {rnd}")
 
     def clients_at(self, rnd: int) -> List[int]:

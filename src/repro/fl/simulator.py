@@ -8,6 +8,28 @@ isolated shards, FedAvg within shards, intermediate-parameter storage
 
 Client local training is vmapped (clients in a shard train in parallel);
 everything is jitted once per (model, batch-shape).
+
+Round engine
+------------
+The hot loop keeps client parameters **stacked (M, ...) on device** from
+local training through FedAvg, calibration, and coded encoding:
+
+* ``shard_round`` (jitted, one dispatch per shard per round) runs the vmapped
+  local training and, in the same XLA program, computes the FedAvg mean
+  (``tree.map(mean(0))``), the per-client update norms as one (M,) reduction,
+  and — for the coded store — the stacked (M, P) flat parameter matrix
+  (``coding.tree_to_flat_stacked``). No per-client unstack, no per-scalar
+  host pulls: stored-update norms are fetched ONCE per stage as arrays.
+* ``CodedStore.put_round_flat`` takes the pre-flattened matrices with specs
+  and padding cached per stage, and defers the Lagrange encode so G rounds
+  are batched into a single (S, G*P) coded matmul.
+* SE/FE calibrated retraining (eq. 3) runs through ``calib_round`` — vmapped
+  retraining plus ``unlearning.calibrate_stacked`` fused in one jit — instead
+  of a per-client Python loop over pytrees.
+
+The seed per-client path is kept callable via ``train_stage(...,
+engine="legacy")`` for A/B benchmarking (``benchmarks/fig6_round_engine.py``)
+and numerical-equivalence tests (``tests/test_round_engine.py``).
 """
 from __future__ import annotations
 
@@ -101,8 +123,37 @@ class FLSimulator:
                                           length=epochs)
             return params
 
+        def vmapped_train(params, xs, ys, epochs):
+            """Stacked data (M, n, ...), shared initial params -> (M, ...)."""
+            return jax.vmap(lambda x, y: local_train(params, x, y, epochs)
+                            )(xs, ys)
+
+        def shard_round(params, xs, ys, epochs, payload):
+            """One fused FedAvg round for one shard — everything on device:
+            vmapped local training, stacked (M,) update norms, FedAvg mean,
+            and (optionally) the stacked (M, P) flat parameter matrix for the
+            coded store. Returns (new_global, payload, delta_norms)."""
+            locals_ = vmapped_train(params, xs, ys, epochs)
+            deltas = unlearning.stacked_sub(locals_, params)
+            norms = unlearning.stacked_norms(deltas)
+            new_global = unlearning.stacked_mean(locals_)
+            if payload == "flat":
+                out, _ = coding.tree_to_flat_stacked(locals_)
+            else:
+                out = locals_
+            return new_global, out, norms
+
+        def calib_round(params, xs, ys, stored_norms, epochs):
+            """One fused SE/FE calibrated-retraining round (eq. 3): vmapped
+            retraining + stacked calibration, no per-client host loop."""
+            locals_ = vmapped_train(params, xs, ys, epochs)
+            deltas = unlearning.stacked_sub(locals_, params)
+            return unlearning.calibrate_stacked(params, deltas, stored_norms)
+
         # vmap over clients: stacked data (M, n, ...), shared initial params
         self._local_train = {}
+        self._shard_round = {}
+        self._calib_round = {}
         for ep in set([self.fl.local_epochs,
                        max(int(self.fl.local_epochs / self.fl.retrain_ratio), 1)]):
             self._local_train[ep] = jax.jit(
@@ -111,6 +162,13 @@ class FLSimulator:
             self._local_train[(ep, "fisher")] = jax.jit(
                 jax.vmap(lambda p, x, y, f, e=ep: local_train(p, x, y, e, f),
                          in_axes=(None, 0, 0, None)))
+            for payload in ("flat", "stacked"):
+                self._shard_round[(ep, payload)] = jax.jit(
+                    lambda p, x, y, e=ep, pay=payload:
+                    shard_round(p, x, y, e, pay))
+            self._calib_round[ep] = jax.jit(
+                lambda p, x, y, n, e=ep: calib_round(p, x, y, n, e))
+        self._stacked_mean = jax.jit(unlearning.stacked_mean)
         self._grad_fn = jax.jit(jax.grad(lambda p, b: lf(p, b)[0]))
 
     def _make_batch(self, x, y):
@@ -124,31 +182,101 @@ class FLSimulator:
         ys = np.stack([self.client_data[c][1][:n_min] for c in clients])
         return jnp.asarray(xs), jnp.asarray(ys)
 
+    def _make_store(self, store_kind: str, plan: StagePlan,
+                    group_rounds: int = 1, slice_dtype=None):
+        if store_kind == "full":
+            return FullStore()
+        if store_kind == "uncoded":
+            return UncodedShardStore({c: s for s, cs in plan.shard_clients.items()
+                                      for c in cs})
+        scheme = coding.CodingScheme(num_shards=self.fl.num_shards,
+                                     num_clients=self.fl.clients_per_round)
+        # map slice index -> the stage's participating clients
+        return CodedStore(scheme, plan.shard_clients,
+                          group_rounds=group_rounds, slice_dtype=slice_dtype)
+
     # ------------------------------------------------------------- training
     def train_stage(self, store_kind: str = "coded",
-                    rounds: Optional[int] = None) -> StageRecord:
+                    rounds: Optional[int] = None, engine: str = "fused",
+                    encode_group: Optional[int] = None,
+                    slice_dtype=None) -> StageRecord:
         """One stage: sample clients, split into shards, G FedAvg rounds per
-        shard, storing intermediate params in the requested store."""
+        shard, storing intermediate params in the requested store.
+
+        ``engine="fused"`` (default) keeps everything stacked/device-resident
+        (see module docstring); ``engine="legacy"`` is the seed per-client
+        path, kept for A/B benchmarking. ``encode_group`` batches that many
+        rounds per coded encode (default: all G in one). ``slice_dtype``
+        optionally stores coded slices in e.g. bf16.
+        """
+        if engine == "legacy":
+            if encode_group is not None or slice_dtype is not None:
+                raise ValueError("encode_group/slice_dtype need engine='fused'")
+            return self._train_stage_legacy(store_kind, rounds)
+        if engine != "fused":
+            raise ValueError(f"unknown engine {engine!r}; use 'fused' or 'legacy'")
         fl = self.fl
         g_rounds = rounds or fl.global_rounds
         plan = self.mgr.new_stage()
         rng = jax.random.key(self.seed + plan.stage)
         w0 = init_params(self.cfg, rng)
-
-        if store_kind == "full":
-            store = FullStore()
-        elif store_kind == "uncoded":
-            store = UncodedShardStore({c: s for s, cs in plan.shard_clients.items()
-                                       for c in cs})
-        else:
-            scheme = coding.CodingScheme(num_shards=fl.num_shards,
-                                         num_clients=fl.clients_per_round)
-            # map slice index -> the stage's participating clients
-            store = CodedStore(scheme, plan.shard_clients)
+        store = self._make_store(store_kind, plan,
+                                 group_rounds=encode_group or g_rounds,
+                                 slice_dtype=slice_dtype)
+        coded = isinstance(store, CodedStore)
+        step = self._shard_round[(fl.local_epochs,
+                                  "flat" if coded else "stacked")]
+        row_spec = coding.tree_to_flat(w0)[1] if coded else None
 
         # round-major loop: all shards advance one round, then the round's
         # parameters are stored together (the coded store encodes ACROSS the
         # S shards — eq. 5/6 mixes one round's shard vectors).
+        shards = sorted(plan.shard_clients)
+        ws = {s: w0 for s in shards}
+        data = {s: self._stack_client_data(plan.shard_clients[s])
+                for s in shards}
+        round_globals = {s: [] for s in shards}
+        norms_dev = {s: [] for s in shards}
+        for g in range(g_rounds):
+            payload = {}
+            for s in shards:
+                round_globals[s].append(ws[s])
+                xs, ys = data[s]
+                ws[s], payload[s], nrm = step(ws[s], xs, ys)
+                norms_dev[s].append(nrm)
+            if coded:
+                store.put_round_flat(g, payload, row_spec)
+            else:
+                store.put_round_stacked(
+                    g, {s: (plan.shard_clients[s], payload[s])
+                        for s in shards})
+        if coded:
+            store.flush()
+        for s in shards:
+            round_globals[s].append(ws[s])
+        # ONE host sync for every stored-update norm of the stage —
+        # the legacy path pulled S*G*M scalars with float(...)
+        norms_host = jax.device_get({s: jnp.stack(norms_dev[s])
+                                     for s in shards})
+        norms = {}
+        for s in shards:
+            arr = np.asarray(norms_host[s])            # (G, M)
+            for g in range(g_rounds):
+                for i, c in enumerate(plan.shard_clients[s]):
+                    norms[(s, g, c)] = float(arr[g, i])
+        return StageRecord(plan, dict(ws), round_globals, store,
+                           history_norms=norms)
+
+    def _train_stage_legacy(self, store_kind: str = "coded",
+                            rounds: Optional[int] = None) -> StageRecord:
+        """Seed per-client round loop (unstack + per-scalar norm pulls +
+        per-round tree flatten/encode) — kept for A/B comparison."""
+        fl = self.fl
+        g_rounds = rounds or fl.global_rounds
+        plan = self.mgr.new_stage()
+        rng = jax.random.key(self.seed + plan.stage)
+        w0 = init_params(self.cfg, rng)
+        store = self._make_store(store_kind, plan)
         ws = {s: w0 for s in plan.shard_clients}
         data = {s: self._stack_client_data(cs)
                 for s, cs in plan.shard_clients.items()}
@@ -186,6 +314,12 @@ class FLSimulator:
         impacted = sorted(self.mgr.impacted_shards(plan, requests))
         retrain_ep = max(int(fl.local_epochs / fl.retrain_ratio), 1)
 
+        def stored_norms(shard_of, retained, n_rounds):
+            """(G', M) historical norms, moved to device once."""
+            return jnp.asarray(
+                [[record.history_norms[(shard_of(c), g, c)] for c in retained]
+                 for g in range(n_rounds)], jnp.float32)
+
         if framework in ("SE", "SE-uncoded"):
             models = dict(record.shard_models)
             for s in impacted:
@@ -197,15 +331,11 @@ class FLSimulator:
                 stored0 = self._stored_round(record, s, 0, available, corrupt)
                 w = unlearning.prepare_initial_model(
                     [stored0[c] for c in retained])
-                # calibrated retraining, eq (3)
-                for g in range(min(g_rounds, len(record.round_globals[s]) - 1)):
-                    locals_ = self._local_train[retrain_ep](w, xs, ys)
-                    new_deltas = [unlearning.tree_sub(
-                        jax.tree.map(lambda a, i=i: a[i], locals_), w)
-                        for i in range(len(retained))]
-                    stored_norms = [record.history_norms[(s, g, c)]
-                                    for c in retained]
-                    w = self._calibrate_with_norms(w, new_deltas, stored_norms)
+                # calibrated retraining, eq (3) — fused stacked rounds
+                n_r = min(g_rounds, len(record.round_globals[s]) - 1)
+                nmat = stored_norms(lambda c, s=s: s, retained, n_r)
+                for g in range(n_r):
+                    w = self._calib_round[retrain_ep](w, xs, ys, nmat[g])
                     cost += len(retained) * retrain_ep
                 models[s] = w
             result_models = models
@@ -216,14 +346,9 @@ class FLSimulator:
             xs, ys = self._stack_client_data(retained)
             stored0 = self._all_stored_round(record, 0, available, corrupt)
             w = unlearning.prepare_initial_model([stored0[c] for c in retained])
+            nmat = stored_norms(plan.shard_of, retained, g_rounds)
             for g in range(g_rounds):
-                locals_ = self._local_train[retrain_ep](w, xs, ys)
-                new_deltas = [unlearning.tree_sub(
-                    jax.tree.map(lambda a, i=i: a[i], locals_), w)
-                    for i in range(len(retained))]
-                stored_norms = [record.history_norms[(plan.shard_of(c), g, c)]
-                                for c in retained]
-                w = self._calibrate_with_norms(w, new_deltas, stored_norms)
+                w = self._calib_round[retrain_ep](w, xs, ys, nmat[g])
                 cost += len(retained) * retrain_ep
             result_models = {0: w}
 
@@ -241,9 +366,7 @@ class FLSimulator:
                     locals_ = self._local_train[(ep, "fisher")](w, xs, ys, fisher)
                 else:
                     locals_ = self._local_train[ep](w, xs, ys)
-                per_client = [jax.tree.map(lambda a, i=i: a[i], locals_)
-                              for i in range(len(retained))]
-                w = unlearning.tree_mean(per_client)
+                w = self._stacked_mean(locals_)
                 cost += len(retained) * ep
             result_models = {0: w}
         else:
@@ -256,6 +379,9 @@ class FLSimulator:
 
     # ------------------------------------------------------------- helpers
     def _calibrate_with_norms(self, w, new_deltas, stored_norms):
+        """Seed per-client calibration loop (host-synced ratio per client) —
+        retained as the reference implementation for equivalence tests; the
+        live path is the fused ``calib_round`` / ``calibrate_stacked``."""
         m = len(new_deltas)
         out = w
         for nd, sn in zip(new_deltas, stored_norms):

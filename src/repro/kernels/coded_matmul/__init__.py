@@ -1,1 +1,2 @@
-from repro.kernels.coded_matmul.ops import coded_matmul  # noqa: F401
+from repro.kernels.coded_matmul.ops import (coded_encode_decode,  # noqa: F401
+                                            coded_matmul)

@@ -1,11 +1,14 @@
-"""Jit'd public wrapper: pads to TPU tile alignment, dispatches to the Pallas
-kernel (interpret mode on CPU), unpads."""
+"""Jit'd public wrappers: pad to TPU tile alignment, dispatch to the Pallas
+kernels (interpret mode on CPU), unpad."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.kernels import on_tpu
-from repro.kernels.coded_matmul.kernel import coded_matmul_kernel
+from repro.kernels.coded_matmul.kernel import (coded_matmul_kernel,
+                                               encode_decode_kernel)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -18,13 +21,35 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 
 
 def coded_matmul(coeff: jnp.ndarray, w: jnp.ndarray,
-                 block_p: int = 4096) -> jnp.ndarray:
-    """(C,S) @ (S,P) -> (C,P) through the Pallas MXU kernel."""
+                 block_p: int = 4096, block_c: int = 128,
+                 out_dtype: Optional[jnp.dtype] = None) -> jnp.ndarray:
+    """(C,S) @ (S,P) -> (C,P) through the 2-D-grid Pallas MXU kernel.
+
+    ``out_dtype``: optional storage dtype for the result (e.g. bf16 coded
+    slices at half the footprint); accumulation is always f32.
+    """
     c, s = coeff.shape
     _, p = w.shape
     block_p = min(block_p, max(128, ((p + 127) // 128) * 128))
-    coeff_p = _pad_to(_pad_to(coeff, 0, 8), 1, 8)
+    block_c = min(block_c, max(8, ((c + 7) // 8) * 8))
+    coeff_p = _pad_to(_pad_to(coeff, 0, block_c), 1, 8)
     w_p = _pad_to(_pad_to(w, 0, 8), 1, block_p)
-    out = coded_matmul_kernel(coeff_p, w_p, block_p=block_p,
+    out = coded_matmul_kernel(coeff_p, w_p, block_c=block_c, block_p=block_p,
+                              out_dtype=out_dtype or jnp.float32,
                               interpret=not on_tpu())
     return out[:c, :p]
+
+
+def coded_encode_decode(enc: jnp.ndarray, dec: jnp.ndarray, w: jnp.ndarray,
+                        block_p: int = 4096) -> jnp.ndarray:
+    """Fused dec @ (enc @ w) round-trip: (S,P) -> (S,P), no (C,P) in HBM."""
+    c, s = enc.shape
+    _, p = w.shape
+    block_p = min(block_p, max(128, ((p + 127) // 128) * 128))
+    enc_p = _pad_to(_pad_to(enc, 0, 8), 1, 8)
+    # pad dec consistently: extra enc rows produce zero-weighted coded rows
+    dec_p = _pad_to(_pad_to(dec, 0, 8), 1, 8)
+    w_p = _pad_to(_pad_to(w, 0, 8), 1, block_p)
+    out = encode_decode_kernel(enc_p, dec_p, w_p, block_p=block_p,
+                               interpret=not on_tpu())
+    return out[:s, :p]

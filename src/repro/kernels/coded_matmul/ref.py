@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the coded matmul (Lagrange encode / RS decode core)."""
+"""Pure-jnp oracles for the coded matmul (Lagrange encode / RS decode core)."""
 import jax.numpy as jnp
 
 
@@ -9,3 +9,10 @@ def coded_matmul_ref(coeff: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     is the decode (re-interpolation) matrix.
     """
     return coeff.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def encode_decode_ref(enc: jnp.ndarray, dec: jnp.ndarray,
+                      w: jnp.ndarray) -> jnp.ndarray:
+    """Two-pass oracle for the fused round-trip: dec @ (enc @ w)."""
+    coded = enc.astype(jnp.float32) @ w.astype(jnp.float32)
+    return dec.astype(jnp.float32) @ coded

@@ -179,8 +179,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         rec["memory_analysis"] = _mem_dict(mem)
+        from repro.roofline.hlo_cost import xla_cost_analysis
         rec["cost_analysis"] = {k: float(v) for k, v in
-                                (compiled.cost_analysis() or {}).items()
+                                xla_cost_analysis(compiled).items()
                                 if isinstance(v, (int, float))}
         rec.update(analyze_compiled(compiled, mesh, cfg, SHAPES[shape_name]))
         print(compiled.memory_analysis())

@@ -413,6 +413,23 @@ class HloCostModel:
         return self.comp_cost(self.entry)
 
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older releases return a single dict, some return a one-element list of
+    per-device dicts, newer ones return a flat dict again; ``None`` shows up
+    for trivially-empty programs. Always returns one {property: value} dict.
+    """
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as one dict, version-independent."""
+    return normalize_cost_analysis(compiled.cost_analysis())
+
+
 def analyze_hlo_text(hlo_text: str, num_devices: int) -> Dict:
     model = HloCostModel(hlo_text, num_devices)
     c = model.entry_cost()

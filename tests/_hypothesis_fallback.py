@@ -1,0 +1,75 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The property-based test modules import ``given``/``settings``/``st`` through
+this shim so the suite still COLLECTS AND RUNS without the dependency: each
+``@given`` test executes ``max_examples`` seeded draws from the declared
+strategies (a fixed per-test rng — reproducible, no shrinking). With real
+hypothesis installed (see requirements-dev.txt) the shim is bypassed
+entirely and full property testing applies.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+try:                                      # pragma: no cover - prefer the real thing
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (real hypothesis does the same)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
