@@ -1,30 +1,36 @@
-"""Shared benchmark scaffolding: builds paper-protocol simulators at a scale
-that runs on this CPU container, with one switch (--full) stepping toward the
-paper's full 100-client / G=30 / L=10 setting.
+"""Shared benchmark scaffolding, rebased on the experiment layer: ``Scale``
+maps onto ``repro.fl.experiment.ScenarioConfig`` (one switch (--full)
+stepping toward the paper's full 100-client / G=30 / L=10 setting), and the
+simulator/session builders delegate to ``repro.fl.experiment.scenario``.
 
-Emits ``name,us_per_call,derived`` CSV rows (harness contract).
+Emits ``name,us_per_call,derived`` CSV rows (harness contract).  Suites can
+additionally ``collect_report(name, obj)`` to contribute machine-readable
+session/unlearn trajectories that ``benchmarks/run.py --json-dir`` writes to
+``BENCH_<suite>.json``.
 """
 from __future__ import annotations
 
 import dataclasses
-import sys
 import time
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
-
-from repro.configs import FLConfig, OptimizerConfig, get_config
-from repro.data import (client_datasets_images, client_datasets_lm,
-                        lm_examples, make_char_data, make_image_data)
-from repro.fl import FLSimulator
+from repro.fl.experiment import ScenarioConfig
+from repro.fl.experiment import scenario as _scenario
 
 ROWS = []
+REPORTS: Dict[str, dict] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def collect_report(name: str, report) -> None:
+    """Stash a machine-readable report (anything with ``to_dict`` or a plain
+    dict) for ``run.py --json-dir`` export."""
+    REPORTS[name] = report.to_dict() if hasattr(report, "to_dict") else report
 
 
 @dataclasses.dataclass
@@ -46,44 +52,41 @@ class Scale:
                    image_size=28, seq_len=64, test_n=1000)
 
 
-def fl_config(sc: Scale) -> FLConfig:
-    return FLConfig(num_clients=sc.num_clients,
-                    clients_per_round=sc.clients_per_round,
-                    num_shards=sc.num_shards,
-                    local_epochs=sc.local_epochs,
-                    global_rounds=sc.global_rounds,
-                    retrain_ratio=2.0)
+def scenario_config(sc: Scale, task: str = "image", iid: bool = True,
+                    seed: int = 0, **overrides) -> ScenarioConfig:
+    """Map a benchmark Scale to an experiment ScenarioConfig."""
+    return ScenarioConfig(task=task, iid=iid, seed=seed,
+                          num_clients=sc.num_clients,
+                          clients_per_round=sc.clients_per_round,
+                          num_shards=sc.num_shards,
+                          local_epochs=sc.local_epochs,
+                          global_rounds=sc.global_rounds,
+                          retrain_ratio=2.0,
+                          samples_per_client=sc.samples_per_client,
+                          image_size=sc.image_size, seq_len=sc.seq_len,
+                          test_n=sc.test_n, **overrides)
 
 
 def build_image_sim(sc: Scale, iid: bool, seed: int = 0,
                     store: str = "coded"):
-    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=sc.image_size,
-                              d_model=48, cnn_channels=(8, 16))
-    data = make_image_data(sc.num_clients * sc.samples_per_client,
-                           image_size=sc.image_size, seed=seed, noise=0.25)
-    clients = client_datasets_images(data, sc.num_clients, iid=iid, seed=seed)
-    sim = FLSimulator(cfg, fl_config(sc), clients, task="image",
-                      opt_cfg=OptimizerConfig(name="sgd", lr=0.05, grad_clip=0.0),
-                      local_batch=20, seed=seed)
-    test = make_image_data(sc.test_n, image_size=sc.image_size, seed=seed + 999,
-                           noise=0.25)
-    return sim, (test.images, test.labels)
+    return _scenario.build_simulator(
+        scenario_config(sc, task="image", iid=iid, seed=seed, store=store))
 
 
 def build_lm_sim(sc: Scale, iid: bool, seed: int = 0):
-    cfg = get_config("nanogpt-paper")
-    stream = make_char_data(sc.num_clients * sc.samples_per_client * sc.seq_len
-                            + sc.seq_len + 1, vocab_size=cfg.vocab_size,
-                            seed=seed)
-    toks, labs = lm_examples(stream, sc.seq_len)
-    clients = client_datasets_lm(toks, labs, sc.num_clients, iid=iid, seed=seed)
-    sim = FLSimulator(cfg, fl_config(sc), clients, task="lm",
-                      opt_cfg=OptimizerConfig(name="sgd", lr=0.3, grad_clip=0.0),
-                      local_batch=10, seed=seed)
-    test_stream = make_char_data(sc.test_n * sc.seq_len + 1,
-                                 vocab_size=cfg.vocab_size, seed=seed + 999)
-    tt, tl = lm_examples(test_stream, sc.seq_len)
-    return sim, (tt, tl)
+    return _scenario.build_simulator(
+        scenario_config(sc, task="lm", iid=iid, seed=seed))
+
+
+def build_image_session(sc: Scale, iid: bool, seed: int = 0,
+                        store: str = "coded"):
+    return _scenario.build_session(
+        scenario_config(sc, task="image", iid=iid, seed=seed, store=store))
+
+
+def build_lm_session(sc: Scale, iid: bool, seed: int = 0):
+    return _scenario.build_session(
+        scenario_config(sc, task="lm", iid=iid, seed=seed))
 
 
 def timed(fn, *args, **kw):

@@ -1,6 +1,6 @@
 """Paper Fig. 5: communication time and storage overhead with concurrent
 adaptive requests — FE (full central storage) vs Uncoded SE (isolated
-sharding) vs Coded SE (isolated + coded).
+sharding) vs Coded SE (isolated + coded), driven through ``FederatedSession``.
 
 (a/b): comm time + storage for the base setting.
 (c/d): storage/comm as the number of clients / global rounds grows (modelled
@@ -11,12 +11,12 @@ network rate (1 Gbit/s).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import Scale, build_image_sim, emit, timed
+from benchmarks.common import (Scale, build_image_session, collect_report,
+                               emit)
 from repro.checkpoint.store import tree_bytes
 from repro.core import theory
 from repro.core.sharding import adaptive_requests
+from repro.fl.experiment import UnlearnRequest
 
 BASE_DELAY_S = 0.1
 NET_RATE = 1e9 / 8            # bytes/s (1 Gbit/s)
@@ -30,21 +30,24 @@ def run(sc: Scale):
     # measured stores on the real trained stage -----------------------------
     for store_kind, name in (("full", "FE"), ("uncoded", "SE-uncoded"),
                              ("coded", "SE-coded")):
-        sim, test = build_image_sim(sc, iid=True)
-        record, us = timed(sim.train_stage, store_kind=store_kind)
-        requests = adaptive_requests(record.plan, 3)
+        session, _test = build_image_session(sc, iid=True, store=store_kind)
+        session.run_stage()
         fw = "FE" if store_kind == "full" else "SE"
-        res = sim.unlearn(fw, record, requests)
-        st = record.store.stats
+        res = session.unlearn(UnlearnRequest(
+            lambda plan: adaptive_requests(plan, 3), framework=fw))[0]
+        stage = session.report.stages[0]
+        st = stage.store_stats
         ct = comm_time(sc.clients_per_round * sc.global_rounds,
                        st.comm_bytes_store + st.comm_bytes_retrieve)
         emit(f"fig5_{name}_storage", 0.0,
              f"server_bytes={st.server_bytes};client_bytes={st.client_bytes};"
-             f"comm_time_s={ct:.2f};retrain_s={res.wall_time:.2f}")
+             f"comm_time_s={ct:.2f};retrain_s={res.wall_time:.2f};"
+             f"train_s={stage.train_wall:.2f}")
+        collect_report(f"fig5_{name}", session.report)
 
     # modelled scaling curves (paper Fig. 5c/d) ------------------------------
-    sim, _ = build_image_sim(sc, iid=True)
-    record = sim.train_stage(store_kind="full")
+    session, _ = build_image_session(sc, iid=True, store="full")
+    record = session.run_stage()
     c0 = record.store.clients_at(0)[0]
     mb = tree_bytes(record.store.get(0, c0))
     for c in (20, 40, 60, 80, 100):

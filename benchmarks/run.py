@@ -1,13 +1,23 @@
 """Benchmark driver — one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV rows.
+``name,us_per_call,derived`` CSV rows; ``--json-dir`` additionally writes one
+machine-readable ``BENCH_<suite>.json`` per suite (the suite's rows plus any
+session/unlearn trajectories collected via ``common.collect_report``).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]
+        [--fast] [--json-dir out/]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main(argv=None) -> None:
@@ -15,6 +25,7 @@ def main(argv=None) -> None:
     from benchmarks import (fig3_single_request, fig4_concurrent, fig5_storage,
                             fig6_round_engine, kernels_bench, table1_f1_time,
                             theory_check)
+    from benchmarks import common
     from benchmarks.common import Scale, emit
 
     ap = argparse.ArgumentParser()
@@ -24,6 +35,8 @@ def main(argv=None) -> None:
                     help="paper-scale (100 clients, G=30, L=10) — slow on CPU")
     ap.add_argument("--fast", action="store_true",
                     help="minimal scale for CI")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<suite>.json per suite to this directory")
     args = ap.parse_args(argv)
 
     sc = Scale.full() if args.full else Scale()
@@ -42,10 +55,28 @@ def main(argv=None) -> None:
         "table1": table1_f1_time.run,
     }
     only = args.only.split(",") if args.only else list(suites)
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
     t0 = time.time()
     for name in only:
         print(f"# --- {name} ---", flush=True)
+        rows_before = len(common.ROWS)
+        reports_before = set(common.REPORTS)
+        t_suite = time.time()
         suites[name](sc)
+        if args.json_dir:
+            payload = {
+                "suite": name,
+                "wall_s": time.time() - t_suite,
+                "scale": vars(sc),
+                "rows": [_parse_row(r) for r in common.ROWS[rows_before:]],
+                "reports": {k: v for k, v in common.REPORTS.items()
+                            if k not in reports_before},
+            }
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"# wrote {path}", flush=True)
     emit("bench_total_wall", (time.time() - t0) * 1e6, f"suites={len(only)}")
 
 

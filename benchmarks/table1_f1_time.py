@@ -1,37 +1,45 @@
 """Paper Table 1: MIA F1 score (down = better unlearning) and retraining time
-for IID and non-IID distributions, both tasks, all four frameworks."""
+for IID and non-IID distributions, both tasks, all four registered frameworks
+— driven through ``FederatedSession`` so the per-request trajectory lands in
+the session report (exported by ``run.py --json-dir``)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Scale, build_image_sim, build_lm_sim, emit
+from benchmarks.common import (Scale, build_image_session, build_lm_session,
+                               collect_report, emit)
+from repro.fl.experiment import FRAMEWORKS, UnlearnRequest
 from repro.fl.mia import mia_f1
 
-FRAMEWORKS = ("FR", "FE", "RR", "SE")
+FRAMEWORK_ORDER = ("FR", "FE", "RR", "SE")
+assert all(fw in FRAMEWORKS for fw in FRAMEWORK_ORDER)
 
 
 def run(sc: Scale, tasks=("image", "lm"), iids=(True, False)):
     for task in tasks:
         for iid in iids:
             tag = f"table1_{task}_{'iid' if iid else 'noniid'}"
-            sim, test = (build_image_sim if task == "image" else build_lm_sim)(
-                sc, iid=iid)
-            record = sim.train_stage(store_kind="coded")
+            session, test = (build_image_session if task == "image"
+                             else build_lm_session)(sc, iid=iid)
+            sim = session.sim
+            record = session.run_stage()
             victim = record.plan.shard_clients[0][0]
             members = [c for c in record.plan.clients if c != victim][:6]
             mx = np.concatenate([sim.client_data[c][0][:40] for c in members])
             my = np.concatenate([sim.client_data[c][1][:40] for c in members])
-            for fw in FRAMEWORKS:
-                res = sim.unlearn(fw, record, [victim])
+            cost = {}
+            for fw in FRAMEWORK_ORDER:
+                res = session.unlearn(UnlearnRequest([victim],
+                                                     framework=fw))[0]
+                cost[fw] = res.cost_units
                 f1 = mia_f1(sim._pf, res.models, sim._make_batch, sim.task,
                             (mx, my), test, sim.client_data[victim])
                 emit(f"{tag}_{fw}", res.wall_time * 1e6,
                      f"mia_f1={f1:.4f};retrain_s={res.wall_time:.2f};"
                      f"cost_units={res.cost_units:.0f}")
-            fr = sim.unlearn("FR", record, [victim])
-            se = sim.unlearn("SE", record, [victim])
             emit(f"{tag}_time_gain", 0.0,
-                 f"gain={1 - se.cost_units / max(fr.cost_units, 1e-9):.2%}")
+                 f"gain={1 - cost['SE'] / max(cost['FR'], 1e-9):.2%}")
+            collect_report(tag, session.report)
 
 
 if __name__ == "__main__":

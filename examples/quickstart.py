@@ -1,37 +1,30 @@
-"""Quickstart: the paper's full loop in ~60 seconds on CPU.
+"""Quickstart: the paper's full loop in ~60 seconds on CPU, on the
+experiment API.
 
-Trains the paper's CNN across a federation with isolated shards + coded
-storage, serves an unlearning request with SE, and compares against the
-FedRetrain gold standard.
+One ``ScenarioConfig`` describes the federation; ``FederatedSession`` trains
+the paper's CNN across isolated shards with coded parameter storage, serves
+an unlearning request with SE (and the FR gold standard for comparison), and
+a membership-inference attack checks the victim is actually forgotten.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
-
-from repro.configs import FLConfig, OptimizerConfig, get_config
-from repro.data import client_datasets_images, make_image_data
-from repro.fl import FLSimulator
-from repro.fl.mia import mia_f1
-
 import numpy as np
+
+from repro.fl.experiment import ScenarioConfig, UnlearnRequest, build_session
+from repro.fl.mia import mia_f1
 
 
 def main():
-    fl = FLConfig(num_clients=12, clients_per_round=8, num_shards=2,
-                  local_epochs=4, global_rounds=5, retrain_ratio=2.0)
-    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=14,
-                              d_model=48, cnn_channels=(8, 16))
-    data = make_image_data(12 * 100, image_size=14, noise=0.25, seed=0)
-    clients = client_datasets_images(data, fl.num_clients, iid=True)
-    test = make_image_data(400, image_size=14, noise=0.25, seed=99)
-
-    sim = FLSimulator(cfg, fl, clients, task="image",
-                      opt_cfg=OptimizerConfig(name="sgd", lr=0.05,
-                                              grad_clip=0.0), local_batch=20)
+    cfg = ScenarioConfig(task="image", num_clients=12, clients_per_round=8,
+                         num_shards=2, local_epochs=4, global_rounds=5,
+                         samples_per_client=100, image_size=14, test_n=400,
+                         store="coded")
+    session, (test_x, test_y) = build_session(cfg)
+    sim = session.sim
 
     print("== train: 2 isolated shards, coded parameter store ==")
-    record = sim.train_stage(store_kind="coded")
-    base = sim.evaluate(record.shard_models, test.images, test.labels)
+    record = session.run_stage()
+    base = sim.evaluate(record.shard_models, test_x, test_y)
     print(f"   shard-ensemble accuracy: {base['acc']:.3f}")
     st = record.store.stats
     print(f"   server storage: {st.server_bytes} B (keys only); "
@@ -40,20 +33,27 @@ def main():
     victim = record.plan.shard_clients[0][0]
     print(f"== unlearn client {victim} (shard 0) ==")
     for fw in ("SE", "FR"):
-        res = sim.unlearn(fw, record, [victim])
-        m = sim.evaluate(res.models, test.images, test.labels)
+        res = session.unlearn(UnlearnRequest([victim], framework=fw))[0]
+        m = sim.evaluate(res.models, test_x, test_y)
         print(f"   {fw:3s}: acc={m['acc']:.3f}  cost={res.cost_units:.0f} "
               f"client-epochs  wall={res.wall_time:.1f}s  "
               f"impacted_shards={res.impacted_shards}")
 
-    res = sim.unlearn("SE", record, [victim])
+    res = session.unlearn(UnlearnRequest([victim], framework="SE"))[0]
     members = [c for c in record.plan.clients if c != victim][:4]
-    mx = np.concatenate([clients[c][0][:40] for c in members])
-    my = np.concatenate([clients[c][1][:40] for c in members])
+    mx = np.concatenate([sim.client_data[c][0][:40] for c in members])
+    my = np.concatenate([sim.client_data[c][1][:40] for c in members])
     f1 = mia_f1(sim._pf, res.models, sim._make_batch, "image",
-                (mx, my), (test.images, test.labels), clients[victim])
-    print(f"== membership-inference attack on the forgotten client ==")
+                (mx, my), (test_x, test_y), sim.client_data[victim])
+    print("== membership-inference attack on the forgotten client ==")
     print(f"   attack F1 = {f1:.3f} (lower = better forgotten)")
+
+    print("== session report (JSON excerpt) ==")
+    report = session.report.to_dict()
+    print(f"   stages={report['num_stages']} "
+          f"train_wall={report['total_train_wall_s']:.1f}s "
+          f"unlearn_wall={report['total_unlearn_wall_s']:.1f}s "
+          f"cost_units={report['total_cost_units']:.0f}")
 
 
 if __name__ == "__main__":

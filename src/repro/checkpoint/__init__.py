@@ -1,2 +1,4 @@
-from repro.checkpoint.store import (CodedStore, FullStore, StoreStats,  # noqa: F401
-                                    UncodedShardStore, tree_bytes)
+from repro.checkpoint.store import (CodedStore, FullStore,  # noqa: F401
+                                    ParameterStore, RoundPayload, STORES,
+                                    StoreStats, UncodedShardStore, make_store,
+                                    register_store, tree_bytes)

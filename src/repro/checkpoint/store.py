@@ -10,13 +10,27 @@
                      reconstructs with any >=S intact slices and tolerates up
                      to (C-S)/2 corrupted ones.
 
-Every store reports byte-level accounting so the Fig. 5 benchmark can compare
-storage overhead and (modelled) communication time.
+Store API
+---------
+Every store implements the ``ParameterStore`` protocol with ONE write entry
+point, ``put_round(RoundPayload)``.  A ``RoundPayload`` carries one round's
+parameters in whichever of three forms the producer has on hand — per-client
+trees, per-shard stacked ``(M, ...)`` trees, or per-shard pre-flattened
+``(M, P)`` matrices — and each store consumes the richest form it supports
+(``wants`` advertises the preferred one so the round engine can compute it
+in-jit).  Stores register themselves in the ``STORES`` registry under the
+name used by ``FLSimulator``/``ScenarioConfig`` (``full`` / ``uncoded`` /
+``coded``); third-party stores are one ``@register_store`` away.
+
+Every store reports byte-level accounting (``StoreStats``) so the Fig. 5
+benchmark can compare storage overhead and (modelled) communication time.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from dataclasses import dataclass
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +55,13 @@ class _StackedRow:
     def materialize(self):
         return jax.tree.map(lambda a, i=self.idx: a[i], self.stacked)
 
+    def stacked_rows(self) -> int:
+        return jax.tree.leaves(self.stacked)[0].shape[0]
+
+    def nbytes(self) -> int:
+        """This row's share of the stacked batch's bytes."""
+        return tree_bytes(self.stacked) // max(self.stacked_rows(), 1)
+
 
 @dataclass
 class StoreStats:
@@ -51,31 +72,174 @@ class StoreStats:
     comm_bytes_store: int = 0     # bytes moved client->server (or client<->client)
     comm_bytes_retrieve: int = 0
 
+    def merge(self, other: "StoreStats") -> "StoreStats":
+        """Field-wise accumulate ``other`` into self (returns self) — the one
+        aggregation point for session/benchmark reporting."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def __iadd__(self, other: "StoreStats") -> "StoreStats":
+        return self.merge(other)
+
+    def __add__(self, other: "StoreStats") -> "StoreStats":
+        return dataclasses.replace(self).merge(other)
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Round payload + store protocol
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RoundPayload:
+    """One FedAvg round's parameters, in producer-native form.
+
+    Exactly one of ``client_params`` / ``stacked`` / ``flat`` is set:
+
+    * ``client_params`` — {client_id: pytree} (the seed per-client path).
+    * ``stacked``       — {shard: (M_s, ...) pytree}, rows in
+                          ``shard_clients[shard]`` order (fused engine,
+                          uncoded stores: no per-client unstack).
+    * ``flat``          — {shard: (M_s, P) matrix} + ``row_spec`` (fused
+                          engine, coded store: flattened in-jit by
+                          ``coding.tree_to_flat_stacked``).
+
+    ``shard_clients`` always carries the round's shard membership so every
+    store can serve ``get_shard`` regardless of its internal layout.
+    """
+    rnd: int
+    shard_clients: Dict[int, List[int]]
+    client_params: Optional[Dict[int, object]] = None
+    stacked: Optional[Dict[int, object]] = None
+    flat: Optional[Dict[int, jnp.ndarray]] = None
+    row_spec: object = None
+
+    def __post_init__(self):
+        forms = [x is not None for x in
+                 (self.client_params, self.stacked, self.flat)]
+        if sum(forms) != 1:
+            raise ValueError("RoundPayload needs exactly one of "
+                             "client_params / stacked / flat")
+        if self.flat is not None and self.row_spec is None:
+            raise ValueError("flat payload requires row_spec")
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def from_clients(cls, rnd: int, shard_clients: Dict[int, List[int]],
+                     client_params: Dict[int, object]) -> "RoundPayload":
+        return cls(rnd, {s: list(cs) for s, cs in shard_clients.items()},
+                   client_params=client_params)
+
+    @classmethod
+    def from_stacked(cls, rnd: int, shard_clients: Dict[int, List[int]],
+                     stacked: Dict[int, object]) -> "RoundPayload":
+        return cls(rnd, {s: list(cs) for s, cs in shard_clients.items()},
+                   stacked=stacked)
+
+    @classmethod
+    def from_flat(cls, rnd: int, shard_clients: Dict[int, List[int]],
+                  flat: Dict[int, jnp.ndarray], row_spec) -> "RoundPayload":
+        return cls(rnd, {s: list(cs) for s, cs in shard_clients.items()},
+                   flat=flat, row_spec=row_spec)
+
+    # ------------------------------------------------------------- views
+    def iter_client_trees(self):
+        """Yield (shard, client, lazy-or-real tree) for every client."""
+        if self.client_params is not None:
+            for s, cs in self.shard_clients.items():
+                for c in cs:
+                    if c in self.client_params:
+                        yield s, c, self.client_params[c]
+        elif self.stacked is not None:
+            for s, cs in self.shard_clients.items():
+                for i, c in enumerate(cs):
+                    yield s, c, _StackedRow(self.stacked[s], i)
+        else:
+            raise ValueError("flat payload carries no per-client trees; "
+                             "use a 'stacked' or 'client_params' payload")
+
+
+@runtime_checkable
+class ParameterStore(Protocol):
+    """The single store interface the round engine / session driver target."""
+
+    stats: StoreStats
+    wants: str        # preferred payload form: "flat" | "stacked" | "tree"
+
+    def put_round(self, payload: RoundPayload) -> None: ...
+
+    def flush(self) -> None: ...
+
+    def get(self, rnd: int, client: int): ...
+
+    def get_shard(self, rnd: int, shard: int,
+                  available: Optional[Sequence[int]] = None,
+                  corrupt: Optional[np.ndarray] = None) -> Dict[int, object]: ...
+
+    def clients_at(self, rnd: int) -> List[int]: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+STORES: Dict[str, Callable[..., "ParameterStore"]] = {}
+
+
+def register_store(name: str):
+    """Register a store factory under ``name``.
+
+    Factories are called as ``factory(shard_clients, **options)`` where
+    ``options`` carries ``num_shards``, ``num_clients``, ``group_rounds``,
+    ``slice_dtype``, ``use_kernel`` (factories ignore what they don't need).
+    """
+    def deco(fn):
+        STORES[name] = fn
+        return fn
+    return deco
+
+
+def make_store(kind: str, shard_clients: Dict[int, List[int]],
+               **options) -> "ParameterStore":
+    try:
+        factory = STORES[kind]
+    except KeyError:
+        raise KeyError(f"unknown store {kind!r}; registered: "
+                       f"{sorted(STORES)}") from None
+    return factory(shard_clients, **options)
+
+
+# ---------------------------------------------------------------------------
+# Stores
+# ---------------------------------------------------------------------------
 
 class FullStore:
     """{(round, client_id): params} on the central server."""
 
+    wants = "stacked"
+
     def __init__(self):
         self._data: Dict[Tuple[int, int], object] = {}
+        self._shards: Dict[int, Dict[int, List[int]]] = {}  # rnd -> layout
         self.stats = StoreStats()
 
-    def put_round(self, rnd: int, client_params: Dict[int, object]):
-        for c, p in client_params.items():
-            self._data[(rnd, c)] = p
-            b = tree_bytes(p)
+    def put_round(self, payload: RoundPayload) -> None:
+        self._shards[payload.rnd] = payload.shard_clients
+        for _s, c, p in payload.iter_client_trees():
+            self._data[(payload.rnd, c)] = p
+            b = p.nbytes() if isinstance(p, _StackedRow) else tree_bytes(p)
             self.stats.server_bytes += b
             self.stats.comm_bytes_store += b
 
-    def put_round_stacked(self, rnd: int, shard_batches: Dict[int, Tuple[
-            List[int], object]]):
-        """Stacked fast path: ``{shard: (client_ids, stacked (M, ...) tree)}``.
-        No per-client unstack per round — rows materialize lazily on get()."""
-        for _s, (clients, stacked) in shard_batches.items():
-            b_each = tree_bytes(stacked) // max(len(clients), 1)
-            for i, c in enumerate(clients):
-                self._data[(rnd, c)] = _StackedRow(stacked, i)
-                self.stats.server_bytes += b_each
-                self.stats.comm_bytes_store += b_each
+    def flush(self) -> None:
+        pass
 
     def get(self, rnd: int, client: int):
         p = self._data[(rnd, client)]
@@ -84,6 +248,13 @@ class FullStore:
             self._data[(rnd, client)] = p
         self.stats.comm_bytes_retrieve += tree_bytes(p)
         return p
+
+    def get_shard(self, rnd: int, shard: int,
+                  available: Optional[Sequence[int]] = None,
+                  corrupt: Optional[np.ndarray] = None) -> Dict[int, object]:
+        """Uncoded stores hold plaintext params: ``available``/``corrupt``
+        model slice loss and are inapplicable here (ignored)."""
+        return {c: self.get(rnd, c) for c in self._shards[rnd][shard]}
 
     def clients_at(self, rnd: int) -> List[int]:
         return sorted(c for (r, c) in self._data if r == rnd)
@@ -98,23 +269,13 @@ class UncodedShardStore(FullStore):
         self.shard_of = shard_of
         self._per_shard: Dict[int, int] = {}
 
-    def put_round(self, rnd: int, client_params: Dict[int, object]):
-        for c, p in client_params.items():
-            self._data[(rnd, c)] = p
-            b = tree_bytes(p)
-            s = self.shard_of.get(c, 0)
+    def put_round(self, payload: RoundPayload) -> None:
+        self._shards[payload.rnd] = payload.shard_clients
+        for s, c, p in payload.iter_client_trees():
+            self._data[(payload.rnd, c)] = p
+            b = p.nbytes() if isinstance(p, _StackedRow) else tree_bytes(p)
             self._per_shard[s] = self._per_shard.get(s, 0) + b
             self.stats.comm_bytes_store += b
-        self.stats.server_bytes = max(self._per_shard.values(), default=0)
-
-    def put_round_stacked(self, rnd: int, shard_batches: Dict[int, Tuple[
-            List[int], object]]):
-        for s, (clients, stacked) in shard_batches.items():
-            b = tree_bytes(stacked)
-            self._per_shard[s] = self._per_shard.get(s, 0) + b
-            self.stats.comm_bytes_store += b
-            for i, c in enumerate(clients):
-                self._data[(rnd, c)] = _StackedRow(stacked, i)
         self.stats.server_bytes = max(self._per_shard.values(), default=0)
 
 
@@ -126,6 +287,8 @@ class CodedStore:
     only the CodingScheme (keys). Decode returns {client_id: params} for one
     shard.
     """
+
+    wants = "flat"
 
     def __init__(self, scheme: coding.CodingScheme,
                  shard_clients: Dict[int, List[int]], use_kernel: bool = False,
@@ -143,7 +306,23 @@ class CodedStore:
         self.stats = StoreStats()
         self.stats.server_bytes = 16 * scheme.num_clients  # the keys
 
-    def put_round(self, rnd: int, client_params: Dict[int, object]):
+    def put_round(self, payload: RoundPayload) -> None:
+        if payload.flat is not None:
+            self._put_flat(payload.rnd, payload.flat, payload.row_spec)
+        elif payload.client_params is not None:
+            self._put_trees(payload.rnd, payload.client_params)
+        else:
+            # stacked trees: flatten host-side (slow path, kept for
+            # completeness — the fused engine hands the coded store ``flat``)
+            flat = {}
+            row_spec = None
+            for s, cs in sorted(payload.shard_clients.items()):
+                f, spec = coding.tree_to_flat_stacked(payload.stacked[s])
+                flat[s] = f
+                row_spec = spec
+            self._put_flat(payload.rnd, flat, row_spec)
+
+    def _put_trees(self, rnd: int, client_params: Dict[int, object]):
         """Encode this round's per-shard parameter sets into client slices."""
         shard_trees = []
         layout = []
@@ -158,8 +337,8 @@ class CodedStore:
         self._layouts[rnd] = layout
         self._account_stored(slices)
 
-    def put_round_flat(self, rnd: int, shard_flats: Dict[int, jnp.ndarray],
-                       row_spec):
+    def _put_flat(self, rnd: int, shard_flats: Dict[int, jnp.ndarray],
+                  row_spec):
         """Fast path for the fused round engine: per-shard *stacked, already
         flat* ``(M_s, P)`` client-parameter matrices (from
         ``coding.tree_to_flat_stacked`` inside the jitted round step).
@@ -214,6 +393,14 @@ class CodedStore:
         s_dim = self.scheme.num_shards
         self.stats.encode_flops += 2 * self.scheme.num_clients * s_dim * p
 
+    def get(self, rnd: int, client: int):
+        """Single-client retrieval decodes the client's shard and indexes it
+        (the coded layout has no per-client granularity)."""
+        for s, cs in self.shard_clients.items():
+            if client in cs:
+                return self.get_shard(rnd, s)[client]
+        raise KeyError(client)
+
     def get_shard(self, rnd: int, shard: int,
                   available: Optional[Sequence[int]] = None,
                   corrupt: Optional[np.ndarray] = None) -> Dict[int, object]:
@@ -251,3 +438,28 @@ class CodedStore:
 
     def clients_at(self, rnd: int) -> List[int]:
         return sorted(c for _, cs in self._layouts[rnd] for c in cs)
+
+
+# ---------------------------------------------------------------------------
+# Registered factories (the names FLSimulator / ScenarioConfig use)
+# ---------------------------------------------------------------------------
+
+@register_store("full")
+def _make_full(shard_clients, **_options) -> FullStore:
+    return FullStore()
+
+
+@register_store("uncoded")
+def _make_uncoded(shard_clients, **_options) -> UncodedShardStore:
+    return UncodedShardStore({c: s for s, cs in shard_clients.items()
+                              for c in cs})
+
+
+@register_store("coded")
+def _make_coded(shard_clients, *, num_shards: int, num_clients: int,
+                group_rounds: int = 1, slice_dtype=None,
+                use_kernel: bool = False, **_options) -> CodedStore:
+    scheme = coding.CodingScheme(num_shards=num_shards,
+                                 num_clients=num_clients)
+    return CodedStore(scheme, shard_clients, group_rounds=group_rounds,
+                      slice_dtype=slice_dtype, use_kernel=use_kernel)

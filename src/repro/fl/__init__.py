@@ -1,1 +1,2 @@
 from repro.fl.simulator import FLSimulator, StageRecord, UnlearnResult  # noqa: F401
+from repro.fl import experiment  # noqa: F401

@@ -1,0 +1,28 @@
+"""Pluggable experiment-orchestration layer for federated unlearning.
+
+Three registries/drivers make new scenarios drop-in plugins instead of
+simulator surgery:
+
+* ``STORES`` (``repro.checkpoint.store``) — parameter stores behind one
+  ``put_round(RoundPayload)`` protocol (``full`` / ``uncoded`` / ``coded``).
+* ``FRAMEWORKS`` — unlearning strategies (``SE`` / ``FE`` / ``FR`` / ``RR``)
+  as ``@register_framework`` classes receiving an ``UnlearnContext``.
+* ``FederatedSession`` — the multi-stage driver serving a scheduled stream
+  of unlearning requests across isolated stages, with ``run_scenario``
+  turning one ``ScenarioConfig`` into a ``SessionReport``.
+"""
+from repro.checkpoint.store import (ParameterStore, RoundPayload,  # noqa: F401
+                                    STORES, StoreStats, make_store,
+                                    register_store)
+from repro.fl.experiment.frameworks import (FRAMEWORKS,  # noqa: F401
+                                            UnlearnContext, UnlearnFramework,
+                                            get_framework, register_framework,
+                                            run_unlearn)
+from repro.fl.experiment.scenario import (ScenarioConfig,  # noqa: F401
+                                          build_session, build_simulator,
+                                          run_scenario)
+from repro.fl.experiment.session import (FederatedSession,  # noqa: F401
+                                         RequestSchedule, SessionReport,
+                                         StageReport, UnlearnRequest)
+from repro.fl.experiment.stage import train_stage  # noqa: F401
+from repro.fl.simulator import StageRecord, UnlearnResult  # noqa: F401

@@ -1,0 +1,257 @@
+"""Unlearning-framework registry — strategy classes replacing the simulator's
+if/elif chain.
+
+Each framework is a class registered under one or more names
+(``@register_framework("SE", "SE-uncoded")``).  ``run`` receives an
+``UnlearnContext`` — the stage record plus every capability the seed
+``FLSimulator.unlearn`` body used (stacked client data, jitted
+calibrated-retraining / local-training steps, historical update norms moved
+to device once, shard-impact analysis, stored-round reconstruction through
+the parameter store) — and returns ``(models, cost_units)``.  A third-party
+framework (e.g. Halimi et al.'s PGD client erasure) is therefore one file:
+subclass ``UnlearnFramework``, decorate, and every driver (``FLSimulator``
+shim, ``FederatedSession``, ``run_scenario``) can dispatch to it by name.
+
+``run_unlearn`` is the dispatch entry point: it times the framework, blocks
+on the result, and packages an ``UnlearnResult``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import unlearning
+from repro.models import init_params
+
+
+@dataclass
+class UnlearnContext:
+    """Everything a framework needs to serve one unlearning request against
+    one stage record."""
+    sim: object                       # FLSimulator (jitted steps, data, cfg)
+    record: object                    # StageRecord
+    requests: List[int]               # client ids to erase
+    rounds: int                       # unlearning rounds G'
+    available: Optional[Sequence[int]] = None   # reachable coded slices
+    corrupt: Optional[np.ndarray] = None        # modelled slice corruption
+
+    # ------------------------------------------------------------ accessors
+    @property
+    def plan(self):
+        return self.record.plan
+
+    @property
+    def fl(self):
+        return self.sim.fl
+
+    @property
+    def mgr(self):
+        return self.sim.mgr
+
+    @property
+    def retrain_epochs(self) -> int:
+        """L/r — the reduced local-epoch budget of calibrated retraining."""
+        return max(int(self.fl.local_epochs / self.fl.retrain_ratio), 1)
+
+    @property
+    def impacted(self) -> List[int]:
+        """S' — shards containing at least one requested client."""
+        return sorted(self.mgr.impacted_shards(self.plan, self.requests))
+
+    def retained(self, shard: int) -> List[int]:
+        return self.mgr.retained(self.plan, shard, self.requests)
+
+    def retained_all(self) -> List[int]:
+        gone = set(self.requests)
+        return [c for c in self.plan.clients if c not in gone]
+
+    # ------------------------------------------------------------- data/steps
+    def stack_client_data(self, clients: Sequence[int]):
+        return self.sim._stack_client_data(clients)
+
+    def stored_round(self, shard: int, rnd: int) -> Dict[int, object]:
+        """Reconstruct one shard's stored round from the parameter store
+        (decoding through erasures/corruption for the coded store)."""
+        return self.record.store.get_shard(rnd, shard,
+                                           available=self.available,
+                                           corrupt=self.corrupt)
+
+    def all_stored_round(self, rnd: int) -> Dict[int, object]:
+        out = {}
+        for s in self.plan.shard_clients:
+            out.update(self.stored_round(s, rnd))
+        return out
+
+    def stored_norms(self, shard_of: Callable[[int], int],
+                     retained: Sequence[int], n_rounds: int) -> jnp.ndarray:
+        """(G', M) historical update norms, moved to device once."""
+        hn = self.record.history_norms
+        return jnp.asarray(
+            [[hn[(shard_of(c), g, c)] for c in retained]
+             for g in range(n_rounds)], jnp.float32)
+
+    def calib_round(self, w, xs, ys, round_norms):
+        """One fused calibrated-retraining round (eq. 3) at L/r epochs."""
+        return self.sim._calib_round[self.retrain_epochs](w, xs, ys,
+                                                          round_norms)
+
+    def local_train(self, w, xs, ys, epochs: int, fisher=None):
+        """Vmapped local training -> stacked (M, ...) client params."""
+        if fisher is not None:
+            return self.sim._local_train[(epochs, "fisher")](w, xs, ys, fisher)
+        return self.sim._local_train[epochs](w, xs, ys)
+
+    def stacked_mean(self, stacked):
+        return self.sim._stacked_mean(stacked)
+
+    def init_model(self, salt: int = 777):
+        return init_params(self.sim.cfg, jax.random.key(self.sim.seed + salt))
+
+    def estimate_fisher(self, w, clients: Sequence[int]):
+        return self.sim._estimate_fisher(w, clients)
+
+
+class UnlearnFramework:
+    """Base class for unlearning strategies.  Subclass, implement ``run``,
+    and register with ``@register_framework(name, *aliases)``."""
+
+    name: str = ""
+
+    def run(self, ctx: UnlearnContext):
+        """Return ``(models, cost_units)`` where ``models`` maps shard id to
+        the unlearned model ({0: w} for federation-level frameworks) and
+        ``cost_units`` counts client-epochs of retraining."""
+        raise NotImplementedError
+
+
+FRAMEWORKS: Dict[str, Type[UnlearnFramework]] = {}
+
+
+def register_framework(*names: str):
+    """Class decorator registering an ``UnlearnFramework`` under ``names``."""
+    if not names:
+        raise ValueError("register_framework needs at least one name")
+
+    def deco(cls: Type[UnlearnFramework]) -> Type[UnlearnFramework]:
+        cls.name = names[0]
+        for n in names:
+            FRAMEWORKS[n] = cls
+        return cls
+    return deco
+
+
+def get_framework(name: str) -> UnlearnFramework:
+    try:
+        return FRAMEWORKS[name]()
+    except KeyError:
+        raise ValueError(f"unknown unlearning framework {name!r}; "
+                         f"registered: {sorted(FRAMEWORKS)}") from None
+
+
+def run_unlearn(sim, framework: str, record, requests: Sequence[int],
+                rounds: Optional[int] = None,
+                available: Optional[Sequence[int]] = None,
+                corrupt: Optional[np.ndarray] = None):
+    """Dispatch one unlearning request to the registered framework and
+    package the timed ``UnlearnResult``."""
+    from repro.fl.simulator import UnlearnResult
+
+    fw = get_framework(framework)
+    ctx = UnlearnContext(sim, record, list(requests),
+                         rounds or sim.fl.global_rounds, available, corrupt)
+    t0 = time.perf_counter()
+    impacted = ctx.impacted
+    models, cost = fw.run(ctx)
+    jax.block_until_ready(jax.tree.leaves(list(models.values())[0])[0])
+    wall = time.perf_counter() - t0
+    stats = getattr(record.store, "stats", None)
+    return UnlearnResult(framework, models, wall, cost, stats, impacted)
+
+
+# ---------------------------------------------------------------------------
+# The paper's four frameworks
+# ---------------------------------------------------------------------------
+
+@register_framework("SE", "SE-uncoded")
+class ShardedEraser(UnlearnFramework):
+    """SE (paper Sec 4): isolation means only impacted shards retrain —
+    preparation from the stored round-0 locals (eq. 2), then calibrated
+    retraining at L/r epochs (eq. 3).  "SE-uncoded" is the same algorithm
+    reading from an uncoded shard store."""
+
+    def run(self, ctx: UnlearnContext):
+        models = dict(ctx.record.shard_models)
+        cost = 0.0
+        for s in ctx.impacted:
+            retained = ctx.retained(s)
+            if not retained:
+                continue
+            xs, ys = ctx.stack_client_data(retained)
+            # preparation: reconstruct stored round-0 locals, eq (2)
+            stored0 = ctx.stored_round(s, 0)
+            w = unlearning.prepare_initial_model(
+                [stored0[c] for c in retained])
+            # calibrated retraining, eq (3) — fused stacked rounds
+            n_r = min(ctx.rounds, len(ctx.record.round_globals[s]) - 1)
+            nmat = ctx.stored_norms(lambda c, s=s: s, retained, n_r)
+            for g in range(n_r):
+                w = ctx.calib_round(w, xs, ys, nmat[g])
+                cost += len(retained) * ctx.retrain_epochs
+            models[s] = w
+        return models, cost
+
+
+@register_framework("FE")
+class FedEraser(UnlearnFramework):
+    """FedEraser without sharding: calibrated retraining over ALL retained
+    clients from the full central store."""
+
+    def run(self, ctx: UnlearnContext):
+        retained = ctx.retained_all()
+        xs, ys = ctx.stack_client_data(retained)
+        stored0 = ctx.all_stored_round(0)
+        w = unlearning.prepare_initial_model([stored0[c] for c in retained])
+        nmat = ctx.stored_norms(ctx.plan.shard_of, retained, ctx.rounds)
+        cost = 0.0
+        for g in range(ctx.rounds):
+            w = ctx.calib_round(w, xs, ys, nmat[g])
+            cost += len(retained) * ctx.retrain_epochs
+        return {0: w}, cost
+
+
+class _FullRetrain(UnlearnFramework):
+    """Federation-wide retraining from scratch (no stored parameters used)."""
+
+    use_fisher = False
+
+    def run(self, ctx: UnlearnContext):
+        retained = ctx.retained_all()
+        xs, ys = ctx.stack_client_data(retained)
+        w = ctx.init_model(777)
+        ep = ctx.retrain_epochs if self.use_fisher else ctx.fl.local_epochs
+        # RR: estimate the diagonal Fisher on retained data once
+        fisher = ctx.estimate_fisher(w, retained) if self.use_fisher else None
+        cost = 0.0
+        for g in range(ctx.rounds):
+            locals_ = ctx.local_train(w, xs, ys, ep, fisher)
+            w = ctx.stacked_mean(locals_)
+            cost += len(retained) * ep
+        return {0: w}, cost
+
+
+@register_framework("FR")
+class FedRetrain(_FullRetrain):
+    """The gold standard: full retraining at the original L epochs."""
+    use_fisher = False
+
+
+@register_framework("RR")
+class RapidRetrain(_FullRetrain):
+    """Rapid retraining: reduced epochs with diagonal-Fisher preconditioned
+    local steps."""
+    use_fisher = True

@@ -1,0 +1,136 @@
+"""Scenario runner: one config -> simulator -> multi-stage session -> report.
+
+``ScenarioConfig`` captures everything the paper's experiments vary — task
+(image / lm), data distribution, federation scale, store kind, stage count,
+and the unlearning request schedule — and ``run_scenario`` executes it
+through ``FederatedSession``.  The benchmark suite (``benchmarks/common.py``)
+and ``examples/quickstart.py`` build on these helpers instead of hand-rolling
+model/data/simulator setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs import FLConfig, OptimizerConfig, get_config
+from repro.data import (client_datasets_images, client_datasets_lm,
+                        lm_examples, make_char_data, make_image_data)
+from repro.fl.experiment.session import (FederatedSession, RequestSchedule,
+                                         SessionReport)
+from repro.fl.simulator import FLSimulator
+
+
+@dataclass
+class ScenarioConfig:
+    """One experiment scenario (defaults = the CPU-container scale)."""
+    # task / data
+    task: str = "image"               # "image" | "lm"
+    iid: bool = True
+    seed: int = 0
+    samples_per_client: int = 80
+    image_size: int = 14
+    noise: float = 0.25
+    seq_len: int = 48
+    test_n: int = 400
+    # federation
+    num_clients: int = 20
+    clients_per_round: int = 12
+    num_shards: int = 4
+    local_epochs: int = 4
+    global_rounds: int = 6
+    retrain_ratio: float = 2.0
+    # optimizer (None -> per-task default)
+    opt_name: str = "sgd"
+    lr: Optional[float] = None
+    local_batch: Optional[int] = None
+    # orchestration
+    store: str = "coded"
+    engine: str = "fused"
+    encode_group: Optional[int] = None
+    slice_dtype: object = None
+    num_stages: int = 1
+    schedule: Optional[RequestSchedule] = None
+
+    def fl_config(self) -> FLConfig:
+        return FLConfig(num_clients=self.num_clients,
+                        clients_per_round=self.clients_per_round,
+                        num_shards=self.num_shards,
+                        local_epochs=self.local_epochs,
+                        global_rounds=self.global_rounds,
+                        retrain_ratio=self.retrain_ratio)
+
+    @classmethod
+    def paper_full(cls, **overrides) -> "ScenarioConfig":
+        """The paper's full setting (100 clients, G=30, L=10) — slow on CPU."""
+        base = dict(num_clients=100, clients_per_round=20, num_shards=4,
+                    local_epochs=10, global_rounds=30, samples_per_client=100,
+                    image_size=28, seq_len=64, test_n=1000)
+        base.update(overrides)
+        return cls(**base)
+
+
+TestData = Tuple[np.ndarray, np.ndarray]
+
+
+def build_simulator(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
+    """Build the paper-protocol simulator + held-out test set for a scenario."""
+    if cfg.task == "image":
+        return _build_image(cfg)
+    if cfg.task == "lm":
+        return _build_lm(cfg)
+    raise ValueError(f"unknown task {cfg.task!r}; use 'image' or 'lm'")
+
+
+def _build_image(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
+    model = dataclasses.replace(get_config("cnn-paper"),
+                                image_size=cfg.image_size, d_model=48,
+                                cnn_channels=(8, 16))
+    data = make_image_data(cfg.num_clients * cfg.samples_per_client,
+                           image_size=cfg.image_size, seed=cfg.seed,
+                           noise=cfg.noise)
+    clients = client_datasets_images(data, cfg.num_clients, iid=cfg.iid,
+                                     seed=cfg.seed)
+    opt = OptimizerConfig(name=cfg.opt_name, lr=cfg.lr or 0.05, grad_clip=0.0)
+    sim = FLSimulator(model, cfg.fl_config(), clients, task="image",
+                      opt_cfg=opt, local_batch=cfg.local_batch or 20,
+                      seed=cfg.seed)
+    test = make_image_data(cfg.test_n, image_size=cfg.image_size,
+                           seed=cfg.seed + 999, noise=cfg.noise)
+    return sim, (test.images, test.labels)
+
+
+def _build_lm(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
+    model = get_config("nanogpt-paper")
+    stream = make_char_data(cfg.num_clients * cfg.samples_per_client
+                            * cfg.seq_len + cfg.seq_len + 1,
+                            vocab_size=model.vocab_size, seed=cfg.seed)
+    toks, labs = lm_examples(stream, cfg.seq_len)
+    clients = client_datasets_lm(toks, labs, cfg.num_clients, iid=cfg.iid,
+                                 seed=cfg.seed)
+    opt = OptimizerConfig(name=cfg.opt_name, lr=cfg.lr or 0.3, grad_clip=0.0)
+    sim = FLSimulator(model, cfg.fl_config(), clients, task="lm",
+                      opt_cfg=opt, local_batch=cfg.local_batch or 10,
+                      seed=cfg.seed)
+    test_stream = make_char_data(cfg.test_n * cfg.seq_len + 1,
+                                 vocab_size=model.vocab_size,
+                                 seed=cfg.seed + 999)
+    tt, tl = lm_examples(test_stream, cfg.seq_len)
+    return sim, (tt, tl)
+
+
+def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:
+    """Simulator wrapped in a session configured from the scenario."""
+    sim, test = build_simulator(cfg)
+    session = FederatedSession(sim, store_kind=cfg.store, engine=cfg.engine,
+                               encode_group=cfg.encode_group,
+                               slice_dtype=cfg.slice_dtype)
+    return session, test
+
+
+def run_scenario(cfg: ScenarioConfig) -> SessionReport:
+    """Execute the scenario: K stages with the scheduled unlearning stream."""
+    session, _test = build_session(cfg)
+    return session.run(cfg.num_stages, schedule=cfg.schedule)

@@ -1,0 +1,225 @@
+"""Multi-stage federated session driver — the paper's cross-stage isolation
+claim, end to end.
+
+The paper divides the learning/unlearning timeline into *stages*; clients are
+re-sampled and re-sharded per stage, so a client's data only ever influences
+the stages it participated in.  ``FederatedSession`` runs K stages
+back-to-back against one simulator and serves a stream of unlearning
+requests scheduled between stages: each request is dispatched to its
+registered framework on **only the impacted stages** (those whose plan
+contains a requested client) and, within each, only the impacted shards
+retrain.  Per-stage wall time, store accounting, retraining cost, and the
+unlearning results accumulate into a ``SessionReport`` with JSON export.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Union
+
+from repro.checkpoint.store import StoreStats
+from repro.fl.experiment.frameworks import run_unlearn
+from repro.fl.experiment.stage import train_stage
+
+ClientSpec = Union[Sequence[int], Callable[[object], Sequence[int]]]
+
+
+@dataclass
+class UnlearnRequest:
+    """One unlearning request in a session.
+
+    ``clients`` may be concrete ids or a callable ``plan -> ids`` (resolved
+    against the most recent stage when the request is served — useful for
+    request patterns like ``adaptive_requests`` that need a trained plan).
+    ``after_stage``: serve once stage index ``after_stage`` has completed.
+    ``stages``: explicit target stage indices; default = every completed
+    stage in which a requested client participated (cross-stage isolation).
+    ``apply``: fold the unlearned shard models back into the stage record
+    (serving semantics) instead of leaving the record untouched
+    (comparison semantics, the default — matches the seed ``unlearn``).
+    Requires a shard-level framework (e.g. SE) — federation-level results
+    ({0: w}) cannot replace per-shard models and raise ``ValueError``.
+    """
+    clients: ClientSpec
+    framework: str = "SE"
+    after_stage: int = 0
+    stages: Optional[Sequence[int]] = None
+    rounds: Optional[int] = None
+    apply: bool = False
+
+    def resolve_clients(self, plan) -> List[int]:
+        cs = self.clients(plan) if callable(self.clients) else self.clients
+        return [int(c) for c in cs]
+
+
+@dataclass
+class RequestSchedule:
+    """A stream of requests keyed by the stage they arrive after."""
+    requests: List[UnlearnRequest] = field(default_factory=list)
+
+    def add(self, request: UnlearnRequest) -> "RequestSchedule":
+        self.requests.append(request)
+        return self
+
+    def due(self, stage: int) -> List[UnlearnRequest]:
+        return [r for r in self.requests if r.after_stage == stage]
+
+
+@dataclass
+class StageReport:
+    stage: int                               # session-local index (records[])
+    plan_stage: int                          # the ShardManager's global stage
+    train_wall: float
+    num_shards: int
+    clients: List[int]
+    store_stats: StoreStats                  # snapshot right after training
+    unlearn: List[object] = field(default_factory=list)   # UnlearnResults
+
+    def to_dict(self) -> dict:
+        return {
+            "stage": self.stage,
+            "plan_stage": self.plan_stage,
+            "train_wall_s": self.train_wall,
+            "num_shards": self.num_shards,
+            "clients": list(self.clients),
+            "store_stats": self.store_stats.to_dict(),
+            "unlearn": [u.to_dict() for u in self.unlearn],
+        }
+
+
+@dataclass
+class SessionReport:
+    stages: List[StageReport] = field(default_factory=list)
+    store_kind: str = "coded"
+
+    # ------------------------------------------------------------ aggregates
+    @property
+    def total_train_wall(self) -> float:
+        return sum(s.train_wall for s in self.stages)
+
+    @property
+    def total_unlearn_wall(self) -> float:
+        return sum(u.wall_time for s in self.stages for u in s.unlearn)
+
+    @property
+    def total_cost_units(self) -> float:
+        return sum(u.cost_units for s in self.stages for u in s.unlearn)
+
+    @property
+    def store_stats(self) -> StoreStats:
+        """Whole-session storage accounting, merged across stages."""
+        total = StoreStats()
+        for s in self.stages:
+            total += s.store_stats
+        return total
+
+    def to_dict(self) -> dict:
+        return {
+            "store_kind": self.store_kind,
+            "num_stages": len(self.stages),
+            "total_train_wall_s": self.total_train_wall,
+            "total_unlearn_wall_s": self.total_unlearn_wall,
+            "total_cost_units": self.total_cost_units,
+            "store_stats": self.store_stats.to_dict(),
+            "stages": [s.to_dict() for s in self.stages],
+        }
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+
+class FederatedSession:
+    """Drives one simulator through K training stages with interleaved
+    unlearning requests.
+
+    >>> session = FederatedSession(sim, store_kind="coded")
+    >>> schedule = RequestSchedule([UnlearnRequest([victim], after_stage=0)])
+    >>> report = session.run(num_stages=3, schedule=schedule)
+    """
+
+    def __init__(self, sim, store_kind: str = "coded", engine: str = "fused",
+                 encode_group: Optional[int] = None, slice_dtype=None,
+                 rounds: Optional[int] = None):
+        self.sim = sim
+        self.store_kind = store_kind
+        self.engine = engine
+        self.encode_group = encode_group
+        self.slice_dtype = slice_dtype
+        self.rounds = rounds
+        self.records: List[object] = []          # StageRecord per stage
+        self.report = SessionReport(store_kind=store_kind)
+
+    # ---------------------------------------------------------------- stages
+    def run_stage(self, rounds: Optional[int] = None):
+        """Train the next stage and append its record + report entry."""
+        t0 = time.perf_counter()
+        record = train_stage(self.sim, store_kind=self.store_kind,
+                             rounds=rounds or self.rounds, engine=self.engine,
+                             encode_group=self.encode_group,
+                             slice_dtype=self.slice_dtype)
+        wall = time.perf_counter() - t0
+        self.records.append(record)
+        self.report.stages.append(StageReport(
+            stage=len(self.records) - 1, plan_stage=record.plan.stage,
+            train_wall=wall, num_shards=record.plan.num_shards,
+            clients=record.plan.clients,
+            store_stats=record.store.stats.snapshot()))
+        return record
+
+    # -------------------------------------------------------------- requests
+    def _target_stages(self, request: UnlearnRequest,
+                       clients: Sequence[int]) -> List[int]:
+        if request.stages is not None:
+            bad = [i for i in request.stages
+                   if not 0 <= i < len(self.records)]
+            if bad:
+                raise ValueError(
+                    f"request targets session stage(s) {bad}; only "
+                    f"{len(self.records)} stage(s) have completed")
+            return sorted(request.stages)
+        hit = set(clients)
+        return [i for i, rec in enumerate(self.records)
+                if hit & set(rec.plan.clients)]
+
+    def unlearn(self, request: UnlearnRequest):
+        """Serve one request: dispatch its framework on every impacted stage
+        (and only those).  Returns the list of per-stage ``UnlearnResult``."""
+        if not self.records:
+            raise RuntimeError("no completed stages to unlearn from")
+        clients = request.resolve_clients(self.records[-1].plan)
+        results = []
+        for i in self._target_stages(request, clients):
+            record = self.records[i]
+            stage_clients = [c for c in clients if c in set(record.plan.clients)]
+            if not stage_clients:
+                continue                      # isolation: stage untouched
+            res = run_unlearn(self.sim, request.framework, record,
+                              stage_clients,
+                              rounds=request.rounds or self.rounds)
+            if request.apply:
+                if set(res.models) != set(record.shard_models):
+                    raise ValueError(
+                        f"apply=True needs shard-level models; framework "
+                        f"{request.framework!r} returned keys "
+                        f"{sorted(res.models)} for shards "
+                        f"{sorted(record.shard_models)}")
+                record.shard_models = dict(res.models)
+            self.report.stages[i].unlearn.append(res)
+            # decode/retrieve traffic lands after the training snapshot
+            self.report.stages[i].store_stats = record.store.stats.snapshot()
+            results.append(res)
+        return results
+
+    # ------------------------------------------------------------------- run
+    def run(self, num_stages: int,
+            schedule: Optional[RequestSchedule] = None) -> SessionReport:
+        """K stages back-to-back; after stage k, serve every scheduled
+        request with ``after_stage == k``."""
+        for k in range(num_stages):
+            self.run_stage()
+            if schedule is not None:
+                for req in schedule.due(k):
+                    self.unlearn(req)
+        return self.report

@@ -1,0 +1,135 @@
+"""Stage training — one isolated-sharding FedAvg stage against a registered
+parameter store.
+
+This is the training half of the experiment layer: ``train_stage(sim, ...)``
+runs G FedAvg rounds for every shard of a freshly sampled stage and writes
+each round's parameters into the store through the single
+``ParameterStore.put_round(RoundPayload)`` entry point.  The store's
+``wants`` attribute tells the fused engine which payload form to compute
+*inside* the jitted round step ("flat" for the coded store, "stacked" for
+the uncoded ones), so the store choice never forces a host round-trip.
+
+``FLSimulator.train_stage`` is a deprecated shim over this function.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import RoundPayload
+from repro.core import coding, unlearning
+from repro.models import init_params
+
+
+def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
+                engine: str = "fused", encode_group: Optional[int] = None,
+                slice_dtype=None):
+    """One stage: sample clients, split into shards, G FedAvg rounds per
+    shard, storing intermediate params in the requested (registered) store.
+
+    ``engine="fused"`` (default) keeps everything stacked/device-resident
+    (see ``repro.fl.simulator`` module docstring); ``engine="legacy"`` is the
+    seed per-client path, kept for A/B benchmarking.  ``encode_group``
+    batches that many rounds per coded encode (default: all G in one).
+    ``slice_dtype`` optionally stores coded slices in e.g. bf16.
+
+    Returns a ``StageRecord``.
+    """
+    from repro.fl.simulator import StageRecord
+
+    if engine == "legacy":
+        if encode_group is not None or slice_dtype is not None:
+            raise ValueError("encode_group/slice_dtype need engine='fused'")
+        return _train_stage_legacy(sim, store_kind, rounds)
+    if engine != "fused":
+        raise ValueError(f"unknown engine {engine!r}; use 'fused' or 'legacy'")
+    fl = sim.fl
+    g_rounds = rounds or fl.global_rounds
+    plan = sim.mgr.new_stage()
+    rng = jax.random.key(sim.seed + plan.stage)
+    w0 = init_params(sim.cfg, rng)
+    store = sim._make_store(store_kind, plan,
+                            group_rounds=encode_group or g_rounds,
+                            slice_dtype=slice_dtype)
+    # the store's preferred payload form decides what the jitted round step
+    # computes on device; anything unknown degrades to stacked trees.
+    kind = "flat" if getattr(store, "wants", "stacked") == "flat" else "stacked"
+    step = sim._shard_round[(fl.local_epochs, kind)]
+    row_spec = coding.tree_to_flat(w0)[1] if kind == "flat" else None
+
+    # round-major loop: all shards advance one round, then the round's
+    # parameters are stored together (the coded store encodes ACROSS the
+    # S shards — eq. 5/6 mixes one round's shard vectors).
+    shards = sorted(plan.shard_clients)
+    ws = {s: w0 for s in shards}
+    data = {s: sim._stack_client_data(plan.shard_clients[s]) for s in shards}
+    round_globals = {s: [] for s in shards}
+    norms_dev = {s: [] for s in shards}
+    for g in range(g_rounds):
+        payload = {}
+        for s in shards:
+            round_globals[s].append(ws[s])
+            xs, ys = data[s]
+            ws[s], payload[s], nrm = step(ws[s], xs, ys)
+            norms_dev[s].append(nrm)
+        if kind == "flat":
+            store.put_round(RoundPayload.from_flat(
+                g, plan.shard_clients, payload, row_spec))
+        else:
+            store.put_round(RoundPayload.from_stacked(
+                g, plan.shard_clients, payload))
+    store.flush()
+    for s in shards:
+        round_globals[s].append(ws[s])
+    # ONE host sync for every stored-update norm of the stage —
+    # the legacy path pulled S*G*M scalars with float(...)
+    norms_host = jax.device_get({s: jnp.stack(norms_dev[s]) for s in shards})
+    norms = {}
+    for s in shards:
+        arr = np.asarray(norms_host[s])            # (G, M)
+        for g in range(g_rounds):
+            for i, c in enumerate(plan.shard_clients[s]):
+                norms[(s, g, c)] = float(arr[g, i])
+    return StageRecord(plan, dict(ws), round_globals, store,
+                       history_norms=norms)
+
+
+def _train_stage_legacy(sim, store_kind: str = "coded",
+                        rounds: Optional[int] = None):
+    """Seed per-client round loop (unstack + per-scalar norm pulls +
+    per-round tree flatten/encode) — kept for A/B comparison."""
+    from repro.fl.simulator import StageRecord
+
+    fl = sim.fl
+    g_rounds = rounds or fl.global_rounds
+    plan = sim.mgr.new_stage()
+    rng = jax.random.key(sim.seed + plan.stage)
+    w0 = init_params(sim.cfg, rng)
+    store = sim._make_store(store_kind, plan)
+    ws = {s: w0 for s in plan.shard_clients}
+    data = {s: sim._stack_client_data(cs)
+            for s, cs in plan.shard_clients.items()}
+    round_globals = {s: [] for s in plan.shard_clients}
+    norms = {}
+    for g in range(g_rounds):
+        all_params = {}
+        for s, clients in plan.shard_clients.items():
+            round_globals[s].append(ws[s])
+            xs, ys = data[s]
+            locals_ = sim._local_train[fl.local_epochs](ws[s], xs, ys)
+            per_client = [jax.tree.map(lambda a, i=i: a[i], locals_)
+                          for i in range(len(clients))]
+            all_params.update(dict(zip(clients, per_client)))
+            for i, c in enumerate(clients):
+                d = unlearning.tree_sub(per_client[i], ws[s])
+                norms[(s, g, c)] = float(unlearning.tree_norm(d))
+            ws[s] = unlearning.tree_mean(per_client)
+        store.put_round(RoundPayload.from_clients(g, plan.shard_clients,
+                                                  all_params))
+    for s in plan.shard_clients:
+        round_globals[s].append(ws[s])
+    return StageRecord(plan, dict(ws), round_globals, store,
+                       history_norms=norms)

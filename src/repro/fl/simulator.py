@@ -6,8 +6,19 @@ isolated shards, FedAvg within shards, intermediate-parameter storage
 (full / uncoded-shard / coded), and the four unlearning frameworks
 (FR / FE / RR / SE).
 
-Client local training is vmapped (clients in a shard train in parallel);
-everything is jitted once per (model, batch-shape).
+The simulator is the *engine room*: it owns the client data, the jitted
+training/calibration steps, and evaluation.  Orchestration lives in
+``repro.fl.experiment``:
+
+* ``experiment.train_stage(sim, ...)`` — one stage against a registered
+  parameter store (``STORES``; ``full`` / ``uncoded`` / ``coded``).
+* ``experiment.run_unlearn(sim, framework, ...)`` — dispatch to a registered
+  unlearning framework (``FRAMEWORKS``; ``SE`` / ``FE`` / ``FR`` / ``RR``).
+* ``experiment.FederatedSession`` — K stages with a scheduled stream of
+  unlearning requests (the paper's cross-stage isolation).
+
+``FLSimulator.train_stage`` / ``FLSimulator.unlearn`` remain as deprecated
+thin shims over those entry points.
 
 Round engine
 ------------
@@ -20,9 +31,9 @@ local training through FedAvg, calibration, and coded encoding:
   and — for the coded store — the stacked (M, P) flat parameter matrix
   (``coding.tree_to_flat_stacked``). No per-client unstack, no per-scalar
   host pulls: stored-update norms are fetched ONCE per stage as arrays.
-* ``CodedStore.put_round_flat`` takes the pre-flattened matrices with specs
-  and padding cached per stage, and defers the Lagrange encode so G rounds
-  are batched into a single (S, G*P) coded matmul.
+* The coded store takes the pre-flattened matrices with specs and padding
+  cached per stage, and defers the Lagrange encode so G rounds are batched
+  into a single (S, G*P) coded matmul.
 * SE/FE calibrated retraining (eq. 3) runs through ``calib_round`` — vmapped
   retraining plus ``unlearning.calibrate_stacked`` fused in one jit — instead
   of a per-client Python loop over pytrees.
@@ -33,7 +44,8 @@ and numerical-equivalence tests (``tests/test_round_engine.py``).
 """
 from __future__ import annotations
 
-import time
+import json
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,12 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.store import (CodedStore, FullStore, StoreStats,
-                                    UncodedShardStore, tree_bytes)
+from repro.checkpoint.store import StoreStats, make_store
 from repro.configs.base import FLConfig, ModelConfig, OptimizerConfig
 from repro.core import coding, unlearning
 from repro.core.sharding import ShardManager, StagePlan
-from repro.models import init_params, loss_fn, predict_fn
+from repro.models import loss_fn, predict_fn
 from repro.optim import make_optimizer
 from repro.optim.fisher import diag_fisher, fisher_precondition
 
@@ -69,6 +80,22 @@ class UnlearnResult:
     cost_units: float                # client-epochs of retraining
     store_stats: Optional[StoreStats]
     impacted_shards: Sequence[int]
+
+    def to_dict(self) -> dict:
+        """Machine-readable summary (models excluded — they are pytrees)."""
+        return {
+            "framework": self.framework,
+            "wall_time_s": self.wall_time,
+            "cost_units": self.cost_units,
+            "impacted_shards": [int(s) for s in self.impacted_shards],
+            "num_models": len(self.models),
+            "store_stats": (self.store_stats.to_dict()
+                            if self.store_stats is not None else None),
+        }
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
 
 
 class FLSimulator:
@@ -184,198 +211,39 @@ class FLSimulator:
 
     def _make_store(self, store_kind: str, plan: StagePlan,
                     group_rounds: int = 1, slice_dtype=None):
-        if store_kind == "full":
-            return FullStore()
-        if store_kind == "uncoded":
-            return UncodedShardStore({c: s for s, cs in plan.shard_clients.items()
-                                      for c in cs})
-        scheme = coding.CodingScheme(num_shards=self.fl.num_shards,
-                                     num_clients=self.fl.clients_per_round)
-        # map slice index -> the stage's participating clients
-        return CodedStore(scheme, plan.shard_clients,
+        """Build a registered parameter store for one stage (``STORES``)."""
+        return make_store(store_kind, plan.shard_clients,
+                          num_shards=self.fl.num_shards,
+                          num_clients=self.fl.clients_per_round,
                           group_rounds=group_rounds, slice_dtype=slice_dtype)
 
-    # ------------------------------------------------------------- training
+    # --------------------------------------------------- deprecated shims
     def train_stage(self, store_kind: str = "coded",
                     rounds: Optional[int] = None, engine: str = "fused",
                     encode_group: Optional[int] = None,
                     slice_dtype=None) -> StageRecord:
-        """One stage: sample clients, split into shards, G FedAvg rounds per
-        shard, storing intermediate params in the requested store.
+        """Deprecated shim over ``repro.fl.experiment.train_stage``."""
+        warnings.warn(
+            "FLSimulator.train_stage is deprecated; use "
+            "repro.fl.experiment.train_stage(sim, ...) or FederatedSession",
+            DeprecationWarning, stacklevel=2)
+        from repro.fl.experiment.stage import train_stage
+        return train_stage(self, store_kind=store_kind, rounds=rounds,
+                           engine=engine, encode_group=encode_group,
+                           slice_dtype=slice_dtype)
 
-        ``engine="fused"`` (default) keeps everything stacked/device-resident
-        (see module docstring); ``engine="legacy"`` is the seed per-client
-        path, kept for A/B benchmarking. ``encode_group`` batches that many
-        rounds per coded encode (default: all G in one). ``slice_dtype``
-        optionally stores coded slices in e.g. bf16.
-        """
-        if engine == "legacy":
-            if encode_group is not None or slice_dtype is not None:
-                raise ValueError("encode_group/slice_dtype need engine='fused'")
-            return self._train_stage_legacy(store_kind, rounds)
-        if engine != "fused":
-            raise ValueError(f"unknown engine {engine!r}; use 'fused' or 'legacy'")
-        fl = self.fl
-        g_rounds = rounds or fl.global_rounds
-        plan = self.mgr.new_stage()
-        rng = jax.random.key(self.seed + plan.stage)
-        w0 = init_params(self.cfg, rng)
-        store = self._make_store(store_kind, plan,
-                                 group_rounds=encode_group or g_rounds,
-                                 slice_dtype=slice_dtype)
-        coded = isinstance(store, CodedStore)
-        step = self._shard_round[(fl.local_epochs,
-                                  "flat" if coded else "stacked")]
-        row_spec = coding.tree_to_flat(w0)[1] if coded else None
-
-        # round-major loop: all shards advance one round, then the round's
-        # parameters are stored together (the coded store encodes ACROSS the
-        # S shards — eq. 5/6 mixes one round's shard vectors).
-        shards = sorted(plan.shard_clients)
-        ws = {s: w0 for s in shards}
-        data = {s: self._stack_client_data(plan.shard_clients[s])
-                for s in shards}
-        round_globals = {s: [] for s in shards}
-        norms_dev = {s: [] for s in shards}
-        for g in range(g_rounds):
-            payload = {}
-            for s in shards:
-                round_globals[s].append(ws[s])
-                xs, ys = data[s]
-                ws[s], payload[s], nrm = step(ws[s], xs, ys)
-                norms_dev[s].append(nrm)
-            if coded:
-                store.put_round_flat(g, payload, row_spec)
-            else:
-                store.put_round_stacked(
-                    g, {s: (plan.shard_clients[s], payload[s])
-                        for s in shards})
-        if coded:
-            store.flush()
-        for s in shards:
-            round_globals[s].append(ws[s])
-        # ONE host sync for every stored-update norm of the stage —
-        # the legacy path pulled S*G*M scalars with float(...)
-        norms_host = jax.device_get({s: jnp.stack(norms_dev[s])
-                                     for s in shards})
-        norms = {}
-        for s in shards:
-            arr = np.asarray(norms_host[s])            # (G, M)
-            for g in range(g_rounds):
-                for i, c in enumerate(plan.shard_clients[s]):
-                    norms[(s, g, c)] = float(arr[g, i])
-        return StageRecord(plan, dict(ws), round_globals, store,
-                           history_norms=norms)
-
-    def _train_stage_legacy(self, store_kind: str = "coded",
-                            rounds: Optional[int] = None) -> StageRecord:
-        """Seed per-client round loop (unstack + per-scalar norm pulls +
-        per-round tree flatten/encode) — kept for A/B comparison."""
-        fl = self.fl
-        g_rounds = rounds or fl.global_rounds
-        plan = self.mgr.new_stage()
-        rng = jax.random.key(self.seed + plan.stage)
-        w0 = init_params(self.cfg, rng)
-        store = self._make_store(store_kind, plan)
-        ws = {s: w0 for s in plan.shard_clients}
-        data = {s: self._stack_client_data(cs)
-                for s, cs in plan.shard_clients.items()}
-        round_globals = {s: [] for s in plan.shard_clients}
-        norms = {}
-        for g in range(g_rounds):
-            all_params = {}
-            for s, clients in plan.shard_clients.items():
-                round_globals[s].append(ws[s])
-                xs, ys = data[s]
-                locals_ = self._local_train[fl.local_epochs](ws[s], xs, ys)
-                per_client = [jax.tree.map(lambda a, i=i: a[i], locals_)
-                              for i in range(len(clients))]
-                all_params.update(dict(zip(clients, per_client)))
-                for i, c in enumerate(clients):
-                    d = unlearning.tree_sub(per_client[i], ws[s])
-                    norms[(s, g, c)] = float(unlearning.tree_norm(d))
-                ws[s] = unlearning.tree_mean(per_client)
-            store.put_round(g, all_params)
-        for s in plan.shard_clients:
-            round_globals[s].append(ws[s])
-        return StageRecord(plan, dict(ws), round_globals, store,
-                           history_norms=norms)
-
-    # ----------------------------------------------------------- unlearning
     def unlearn(self, framework: str, record: StageRecord,
                 requests: Sequence[int], rounds: Optional[int] = None,
                 available: Optional[Sequence[int]] = None,
                 corrupt: Optional[np.ndarray] = None) -> UnlearnResult:
-        fl = self.fl
-        g_rounds = rounds or fl.global_rounds
-        plan = record.plan
-        t0 = time.perf_counter()
-        cost = 0.0
-        impacted = sorted(self.mgr.impacted_shards(plan, requests))
-        retrain_ep = max(int(fl.local_epochs / fl.retrain_ratio), 1)
-
-        def stored_norms(shard_of, retained, n_rounds):
-            """(G', M) historical norms, moved to device once."""
-            return jnp.asarray(
-                [[record.history_norms[(shard_of(c), g, c)] for c in retained]
-                 for g in range(n_rounds)], jnp.float32)
-
-        if framework in ("SE", "SE-uncoded"):
-            models = dict(record.shard_models)
-            for s in impacted:
-                retained = self.mgr.retained(plan, s, requests)
-                if not retained:
-                    continue
-                xs, ys = self._stack_client_data(retained)
-                # preparation: reconstruct stored round-0 locals, eq (2)
-                stored0 = self._stored_round(record, s, 0, available, corrupt)
-                w = unlearning.prepare_initial_model(
-                    [stored0[c] for c in retained])
-                # calibrated retraining, eq (3) — fused stacked rounds
-                n_r = min(g_rounds, len(record.round_globals[s]) - 1)
-                nmat = stored_norms(lambda c, s=s: s, retained, n_r)
-                for g in range(n_r):
-                    w = self._calib_round[retrain_ep](w, xs, ys, nmat[g])
-                    cost += len(retained) * retrain_ep
-                models[s] = w
-            result_models = models
-
-        elif framework == "FE":
-            # FedEraser without sharding: calibrate over ALL retained clients
-            retained = [c for c in plan.clients if c not in set(requests)]
-            xs, ys = self._stack_client_data(retained)
-            stored0 = self._all_stored_round(record, 0, available, corrupt)
-            w = unlearning.prepare_initial_model([stored0[c] for c in retained])
-            nmat = stored_norms(plan.shard_of, retained, g_rounds)
-            for g in range(g_rounds):
-                w = self._calib_round[retrain_ep](w, xs, ys, nmat[g])
-                cost += len(retained) * retrain_ep
-            result_models = {0: w}
-
-        elif framework in ("FR", "RR"):
-            retained = [c for c in plan.clients if c not in set(requests)]
-            xs, ys = self._stack_client_data(retained)
-            w = init_params(self.cfg, jax.random.key(self.seed + 777))
-            fisher = None
-            ep = fl.local_epochs if framework == "FR" else retrain_ep
-            if framework == "RR":
-                # estimate the diagonal Fisher on retained data once
-                fisher = self._estimate_fisher(w, retained)
-            for g in range(g_rounds):
-                if framework == "RR":
-                    locals_ = self._local_train[(ep, "fisher")](w, xs, ys, fisher)
-                else:
-                    locals_ = self._local_train[ep](w, xs, ys)
-                w = self._stacked_mean(locals_)
-                cost += len(retained) * ep
-            result_models = {0: w}
-        else:
-            raise ValueError(framework)
-
-        jax.block_until_ready(jax.tree.leaves(list(result_models.values())[0])[0])
-        wall = time.perf_counter() - t0
-        stats = getattr(record.store, "stats", None)
-        return UnlearnResult(framework, result_models, wall, cost, stats, impacted)
+        """Deprecated shim over ``repro.fl.experiment.run_unlearn``."""
+        warnings.warn(
+            "FLSimulator.unlearn is deprecated; use "
+            "repro.fl.experiment.run_unlearn(sim, ...) or FederatedSession",
+            DeprecationWarning, stacklevel=2)
+        from repro.fl.experiment.frameworks import run_unlearn
+        return run_unlearn(self, framework, record, requests, rounds=rounds,
+                           available=available, corrupt=corrupt)
 
     # ------------------------------------------------------------- helpers
     def _calibrate_with_norms(self, w, new_deltas, stored_norms):
@@ -387,22 +255,6 @@ class FLSimulator:
         for nd, sn in zip(new_deltas, stored_norms):
             ratio = sn / max(float(unlearning.tree_norm(nd)), 1e-12)
             out = unlearning.tree_add(out, unlearning.tree_scale(nd, ratio / m))
-        return out
-
-    def _stored_round(self, record: StageRecord, shard: int, rnd: int,
-                      available=None, corrupt=None) -> Dict[int, object]:
-        store = record.store
-        if isinstance(store, CodedStore):
-            return store.get_shard(rnd, shard, available=available,
-                                   corrupt=corrupt)
-        return {c: store.get(rnd, c)
-                for c in record.plan.shard_clients[shard]}
-
-    def _all_stored_round(self, record: StageRecord, rnd: int,
-                          available=None, corrupt=None) -> Dict[int, object]:
-        out = {}
-        for s in record.plan.shard_clients:
-            out.update(self._stored_round(record, s, rnd, available, corrupt))
         return out
 
     def _estimate_fisher(self, params, clients: Sequence[int], n_batches: int = 4):

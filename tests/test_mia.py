@@ -1,0 +1,138 @@
+"""Unit coverage for the membership-inference attack (repro.fl.mia) —
+previously exercised only through the table1 benchmark.
+
+The tests drive ``mia_f1`` with a synthetic 'model' whose logits are embedded
+directly in the inputs, so member/non-member separability (and hence the
+expected attack outcome) is controlled exactly:
+
+* a model that memorizes the forgotten client -> the attack flags its data as
+  member -> high F1 (unlearning failed);
+* a model whose forgotten-client outputs look like held-out data -> low F1
+  (data actually forgotten).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import mia
+
+K = 4          # classes
+N = 120        # examples per split
+
+
+def _predict(_model, batch):
+    """Logits are carried verbatim in the first K input features."""
+    x = batch["images"]
+    return jnp.asarray(x[:, :K])
+
+
+def _make_batch(x, y):
+    return {"images": x, "labels": y}
+
+
+def _member_like(rng, n=N, conf=6.0):
+    """Confident, correct logits (low loss, low entropy) — training data."""
+    y = rng.integers(0, K, n)
+    x = rng.normal(0, 0.1, (n, K)).astype(np.float32)
+    x[np.arange(n), y] += conf
+    return x, y.astype(np.int64)
+
+
+def _nonmember_like(rng, n=N):
+    """Uninformative logits (high loss, high entropy) — held-out data."""
+    y = rng.integers(0, K, n)
+    x = rng.normal(0, 0.3, (n, K)).astype(np.float32)
+    return x, y.astype(np.int64)
+
+
+class TestFeatures:
+    def test_shapes_and_signal(self):
+        rng = np.random.default_rng(0)
+        mx, my = _member_like(rng)
+        nx, ny = _nonmember_like(rng)
+        fm = mia._features(_predict, {0: None}, _make_batch, mx, my, "image")
+        fn = mia._features(_predict, {0: None}, _make_batch, nx, ny, "image")
+        assert fm.shape == (N, 3) and fn.shape == (N, 3)
+        # members: lower nll, higher max-prob, lower entropy
+        assert fm[:, 0].mean() < fn[:, 0].mean()
+        assert fm[:, 1].mean() > fn[:, 1].mean()
+        assert fm[:, 2].mean() < fn[:, 2].mean()
+
+    def test_ensemble_averages_models(self):
+        rng = np.random.default_rng(1)
+        mx, my = _member_like(rng)
+        one = mia._features(_predict, {0: None}, _make_batch, mx, my, "image")
+        two = mia._features(_predict, {0: None, 1: None}, _make_batch,
+                            mx, my, "image")
+        np.testing.assert_allclose(one, two, rtol=1e-5, atol=1e-5)
+
+
+class TestLogreg:
+    def test_separates_separable_data(self):
+        rng = np.random.default_rng(2)
+        x0 = rng.normal(-2.0, 0.5, (200, 3))
+        x1 = rng.normal(+2.0, 0.5, (200, 3))
+        x = np.concatenate([x1, x0])
+        y = np.concatenate([np.ones(200), np.zeros(200)])
+        model = mia._logreg_fit(x, y)
+        thr = float(np.median(mia._logreg_score(model, x)))
+        pred = mia._logreg_predict(model, x, thr)
+        assert (pred == y).mean() > 0.95
+
+
+class TestMiaF1:
+    def test_memorized_forgotten_data_scores_high(self):
+        """If the 'unlearned' model still treats the forgotten client's data
+        like training data, the attack catches it (F1 near 1)."""
+        rng = np.random.default_rng(3)
+        member = _member_like(rng)
+        nonmember = _nonmember_like(rng)
+        forgotten = _member_like(rng)             # still memorized
+        f1 = mia.mia_f1(_predict, {0: None}, _make_batch, "image",
+                        member, nonmember, forgotten)
+        assert 0.6 <= f1 <= 1.0, f1
+
+    def test_forgotten_data_scores_low(self):
+        """If the forgotten client's outputs are indistinguishable from
+        held-out data, the attack F1 collapses toward/below the
+        no-information rate."""
+        rng = np.random.default_rng(4)
+        member = _member_like(rng)
+        nonmember = _nonmember_like(rng)
+        forgotten = _nonmember_like(rng)          # actually forgotten
+        f1 = mia.mia_f1(_predict, {0: None}, _make_batch, "image",
+                        member, nonmember, forgotten)
+        assert 0.0 <= f1 <= 0.62, f1
+
+    def test_ordering(self):
+        """Memorized forgotten data must score strictly higher than
+        genuinely forgotten data under the same attack setup."""
+        rng = np.random.default_rng(5)
+        member = _member_like(rng)
+        nonmember = _nonmember_like(rng)
+        hi = mia.mia_f1(_predict, {0: None}, _make_batch, "image",
+                        member, nonmember, _member_like(rng))
+        lo = mia.mia_f1(_predict, {0: None}, _make_batch, "image",
+                        member, nonmember, _nonmember_like(rng))
+        assert hi > lo
+
+    def test_lm_task_branch(self):
+        """The per-sequence feature path: (n, T) tokens, (n, T, V) logits."""
+        rng = np.random.default_rng(6)
+        T, V = 8, 5
+
+        def predict_lm(_model, batch):
+            y = batch["labels"]
+            onehot = jnp.eye(V)[y]                # (n, T, V)
+            return 6.0 * onehot
+
+        def make_batch(x, y):
+            return {"tokens": x, "labels": y}
+
+        def split(n=60):
+            y = rng.integers(0, V, (n, T)).astype(np.int64)
+            return y.copy(), y
+
+        member, nonmember, forgotten = split(), split(), split()
+        f1 = mia.mia_f1(predict_lm, {0: None}, make_batch, "lm",
+                        member, nonmember, forgotten)
+        assert 0.0 <= f1 <= 1.0

@@ -10,11 +10,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CodedStore, FullStore
+from repro.checkpoint.store import CodedStore, FullStore, RoundPayload
 from repro.configs import FLConfig, OptimizerConfig, get_config
 from repro.core import coding, unlearning
 from repro.data import client_datasets_images, make_image_data
 from repro.fl import FLSimulator
+from repro.fl.experiment import run_unlearn, train_stage
 
 
 def _stacked_tree(m=5, seed=0):
@@ -192,8 +193,8 @@ class TestFusedEngineEquivalence:
     @pytest.fixture(scope="class")
     def records(self):
         s_leg, s_fus = _tiny_sim(), _tiny_sim()
-        return (s_leg.train_stage(store_kind="coded", engine="legacy"),
-                s_fus.train_stage(store_kind="coded", engine="fused"), s_fus)
+        return (train_stage(s_leg, store_kind="coded", engine="legacy"),
+                train_stage(s_fus, store_kind="coded", engine="fused"), s_fus)
 
     def test_shard_models_bit_for_bit(self, records):
         r_leg, r_fus, _ = records
@@ -234,10 +235,50 @@ class TestFusedEngineEquivalence:
         _, r_fus, sim = records
         victim = r_fus.plan.shard_clients[0][0]
         for fw in ("SE", "FE", "FR", "RR"):
-            res = sim.unlearn(fw, r_fus, [victim], rounds=2)
+            res = run_unlearn(sim, fw, r_fus, [victim], rounds=2)
             leaves = jax.tree.leaves(list(res.models.values())[0])
             assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
                        for l in leaves), fw
+
+
+class TestDeprecatedShims:
+    """train_stage/unlearn stay callable on the simulator as thin wrappers
+    over the experiment API: they warn, and their results are bit-identical
+    to the new path on identically-seeded sims."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        s_new, s_old = _tiny_sim(), _tiny_sim()
+        r_new = train_stage(s_new, store_kind="coded")
+        with pytest.warns(DeprecationWarning, match="train_stage is deprecated"):
+            r_old = s_old.train_stage(store_kind="coded")
+        return s_new, r_new, s_old, r_old
+
+    def test_train_stage_shim_equivalent(self, pair):
+        _, r_new, _, r_old = pair
+        assert r_old.plan.shard_clients == r_new.plan.shard_clients
+        for s in r_new.shard_models:
+            for a, b in zip(jax.tree.leaves(r_old.shard_models[s]),
+                            jax.tree.leaves(r_new.shard_models[s])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert r_old.history_norms == r_new.history_norms
+        for g, sl in r_new.store._slices.items():
+            np.testing.assert_array_equal(np.asarray(r_old.store._slices[g]),
+                                          np.asarray(sl))
+
+    @pytest.mark.parametrize("fw", ["SE", "FE", "FR", "RR"])
+    def test_unlearn_shim_equivalent(self, pair, fw):
+        s_new, r_new, s_old, r_old = pair
+        victim = r_new.plan.shard_clients[0][0]
+        res_new = run_unlearn(s_new, fw, r_new, [victim], rounds=2)
+        with pytest.warns(DeprecationWarning, match="unlearn is deprecated"):
+            res_old = s_old.unlearn(fw, r_old, [victim], rounds=2)
+        assert res_old.impacted_shards == res_new.impacted_shards
+        assert res_old.cost_units == res_new.cost_units
+        for s in res_new.models:
+            for a, b in zip(jax.tree.leaves(res_old.models[s]),
+                            jax.tree.leaves(res_new.models[s])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 class TestStoreFastPaths:
@@ -259,8 +300,10 @@ class TestStoreFastPaths:
         eager = CodedStore(sch, shard_clients, group_rounds=1)
         per_round = [flats(i) for i in range(3)]
         for g, f in enumerate(per_round):
-            grouped.put_round_flat(g, f, row_spec)
-            eager.put_round_flat(g, f, row_spec)
+            grouped.put_round(RoundPayload.from_flat(g, shard_clients, f,
+                                                     row_spec))
+            eager.put_round(RoundPayload.from_flat(g, shard_clients, f,
+                                                   row_spec))
         assert not grouped._slices          # group not full: still pending
         assert len(eager._slices) == 3      # eager store encodes per round
         got = grouped.get_shard(1, 0)       # triggers auto-flush
@@ -280,8 +323,8 @@ class TestStoreFastPaths:
              for s in (0, 1)}
         st32 = CodedStore(sch, shard_clients)
         st16 = CodedStore(sch, shard_clients, slice_dtype=jnp.bfloat16)
-        st32.put_round_flat(0, f, row_spec)
-        st16.put_round_flat(0, f, row_spec)
+        st32.put_round(RoundPayload.from_flat(0, shard_clients, f, row_spec))
+        st16.put_round(RoundPayload.from_flat(0, shard_clients, f, row_spec))
         st32.flush(), st16.flush()
         assert st16.stats.client_bytes * 2 == st32.stats.client_bytes
         a = st32.get_shard(0, 0)
@@ -294,9 +337,13 @@ class TestStoreFastPaths:
     def test_full_store_stacked_rows_lazy(self):
         store = FullStore()
         stacked = _stacked_tree(m=3, seed=5)
-        store.put_round_stacked(0, {0: ([10, 11, 12], stacked)})
+        store.put_round(RoundPayload.from_stacked(0, {0: [10, 11, 12]},
+                                                  {0: stacked}))
         got = store.get(0, 11)
         want = jax.tree.map(lambda a: a[1], stacked)
         for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert store.clients_at(0) == [10, 11, 12]
+        # the unified read path serves whole shards on uncoded stores too
+        shard = store.get_shard(0, 0)
+        assert sorted(shard) == [10, 11, 12]
