@@ -79,9 +79,10 @@ def build_lm_sim(sc: Scale, iid: bool, seed: int = 0):
 
 
 def build_image_session(sc: Scale, iid: bool, seed: int = 0,
-                        store: str = "coded"):
+                        store: str = "coded", **overrides):
     return _scenario.build_session(
-        scenario_config(sc, task="image", iid=iid, seed=seed, store=store))
+        scenario_config(sc, task="image", iid=iid, seed=seed, store=store,
+                        **overrides))
 
 
 def build_lm_session(sc: Scale, iid: bool, seed: int = 0):

@@ -1,51 +1,124 @@
-"""Round-engine A/B: stage-training throughput, fused stacked path vs the
-seed per-client path (same model, data, store kind, and RNG protocol).
+"""Round-engine A/B/C: stage-training throughput across the three engines
+(same model, data, store kind, and RNG protocol) plus batched-vs-sequential
+session unlearning.
 
-The fused engine keeps client parameters stacked on device end-to-end: one
-jitted ``shard_round`` per (shard, round) that folds in FedAvg and the update
-norms, stored-norm fetch once per stage, flatten-once coded puts, and all G
-round encodes batched into one coded matmul. The legacy engine is the seed
-loop: per-client unstack, ``float(tree_norm(...))`` per (shard, round,
-client), and a per-round re-flatten + encode.
+Engines, by per-stage dispatch count (see ``repro.fl.experiment.stage``):
 
-Emits per-engine stage wall time and rounds/s, the fused/legacy speedup, and
-the SE unlearning wall time (whose calibration now also runs stacked). Two
-regimes are measured: the paper-protocol scale ``sc`` (local-SGD
-compute-bound — the engine win is bounded by the training floor) and a
-large-C bookkeeping-bound variant (4x the clients per round, half the local
-epochs) where the per-client history handling the engine eliminates is a
+* ``legacy`` — the seed per-client loop: per-client unstack,
+  ``float(tree_norm(...))`` per (shard, round, client), per-round
+  re-flatten + encode (≫ G·S·M host/device round-trips).
+* ``fused``  — one jitted ``shard_round`` per (shard, round) + one deferred
+  batched encode: G·S + 1 dispatches.
+* ``stage``  — the whole-stage superfusion: vmap over shards × scan over
+  rounds with the Lagrange encode fused into the same XLA program — ONE
+  dispatch per stage.
+
+Emits per-engine stage wall time (median of ``ITERS`` timed stages),
+rounds/s, the pairwise speedups, the SE unlearning wall, and a batched
+session-unlearning A/B: four SE requests overlapping on two shards of one
+stage, served sequentially (each request retrains its whole shard — four
+calibrated retrains) vs merged (``batch_requests=True``: each shard retrains
+once, both shards in one vmapped ``calib_stage`` dispatch).  Two regimes
+are measured: the paper-protocol scale ``sc`` (local-SGD compute-bound — the
+engine win is bounded by the training floor) and a large-C
+bookkeeping-bound variant (4x the clients per round, half the local epochs)
+where the per-client history handling the engines eliminate is a
 first-order cost — the ROADMAP's large-fleet regime.
 """
 from __future__ import annotations
 
 import dataclasses
+import statistics
 
-from benchmarks.common import Scale, build_image_sim, emit, timed
+from benchmarks.common import (Scale, build_image_sim, collect_report, emit,
+                               timed)
+
+ITERS = 3
+ENGINES = ("legacy", "fused", "stage")
+
+
+def _dispatches(engine: str, sc: Scale) -> str:
+    g, s, m = sc.global_rounds, sc.num_shards, sc.clients_per_round
+    return {"legacy": f"~{g * s}xtrain+{g * s * m}xnorm+{g}xencode",
+            "fused": f"{g * s}xtrain+1xencode",
+            "stage": "1"}[engine]
 
 
 def _ab(sc: Scale, tag: str):
+    from repro.fl.experiment import run_unlearn, train_stage
+
     stage_us = {}
-    for engine in ("legacy", "fused"):
+    for engine in ENGINES:
         sim, _ = build_image_sim(sc, iid=True)
-        # warm the jit caches so the A/B measures steady-state round time
-        sim.train_stage(store_kind="coded", rounds=1, engine=engine)
-        record, us = timed(sim.train_stage, store_kind="coded", engine=engine)
+        # warm the jit caches so the A/B measures steady-state round time —
+        # at the SAME round count as the timed stages (the stage engine's
+        # program cache is keyed on g_rounds; a rounds=1 warm-up would leave
+        # the G-round program to compile inside the first timed iteration)
+        train_stage(sim, store_kind="coded", engine=engine)
+        walls, record = [], None
+        for _ in range(ITERS):
+            record, us = timed(train_stage, sim, store_kind="coded",
+                               engine=engine)
+            walls.append(us)
+        us = statistics.median(walls)
         stage_us[engine] = us
         rounds_per_s = sc.global_rounds / (us / 1e6)
         emit(f"fig6_stage_train_{engine}{tag}", us,
              f"G={sc.global_rounds};S={sc.num_shards};"
              f"M={sc.clients_per_round};L={sc.local_epochs};"
-             f"rounds_per_s={rounds_per_s:.2f}")
+             f"rounds_per_s={rounds_per_s:.2f};"
+             f"dispatches={_dispatches(engine, sc)};median_of={ITERS}")
         victim = record.plan.shard_clients[0][0]
-        res = sim.unlearn("SE", record, [victim])
+        res = run_unlearn(sim, "SE", record, [victim])
         emit(f"fig6_unlearn_SE_{engine}_record{tag}", res.wall_time * 1e6,
              f"calibrated retraining wall;cost={res.cost_units:.0f}")
     emit(f"fig6_round_engine_speedup{tag}", 0.0,
-         f"fused_vs_legacy={stage_us['legacy'] / stage_us['fused']:.2f}x")
+         f"fused_vs_legacy={stage_us['legacy'] / stage_us['fused']:.2f}x;"
+         f"stage_vs_fused={stage_us['fused'] / stage_us['stage']:.2f}x;"
+         f"stage_vs_legacy={stage_us['legacy'] / stage_us['stage']:.2f}x")
+
+
+def _batched_unlearn(sc: Scale, tag: str):
+    """N=4 overlapping SE requests (two per shard on two shards of one
+    stage): served sequentially (each request triggers a full calibrated
+    retraining of its shard — overlapping shards retrain once PER REQUEST)
+    vs merged into one batch (each impacted shard retrains ONCE with the
+    union of its requested clients removed, the two shards vmapped into a
+    single calib_stage dispatch)."""
+    from repro.fl.experiment import (FederatedSession, RequestSchedule,
+                                     UnlearnRequest)
+
+    def schedule():
+        return RequestSchedule([
+            UnlearnRequest(lambda p, s=s, i=i: [p.shard_clients[s][i]],
+                           framework="SE", after_stage=0)
+            for s in (0, 1) for i in (0, 1)
+        ])
+
+    walls = {}
+    for mode, batch in (("sequential", False), ("batched", True)):
+        sim, _ = build_image_sim(sc, iid=True)    # one sim: jits stay warm
+        per_iter = []
+        report = None
+        for it in range(ITERS + 1):            # iter 0 warms the jit caches
+            session = FederatedSession(sim, store_kind="coded",
+                                       engine="stage", batch_requests=batch)
+            report = session.run(1, schedule=schedule())
+            if it > 0:
+                per_iter.append(report.total_unlearn_wall * 1e6)
+        walls[mode] = statistics.median(per_iter)
+        served = sum(len(st.unlearn) for st in report.stages)
+        emit(f"fig6_unlearn_4req_{mode}{tag}", walls[mode],
+             f"SE;4 requests;{served} serve(s);median_of={ITERS}")
+        collect_report(f"fig6_4req_{mode}{tag}", report)
+    emit(f"fig6_batched_unlearn_speedup{tag}", 0.0,
+         f"batched_vs_sequential="
+         f"{walls['sequential'] / walls['batched']:.2f}x")
 
 
 def run(sc: Scale):
     _ab(sc, "")
+    _batched_unlearn(sc, "")
     if sc.clients_per_round >= 12:      # skip the heavy pass under --fast
         large_c = dataclasses.replace(
             sc, clients_per_round=4 * sc.clients_per_round,

@@ -18,7 +18,9 @@ parameters in whichever of three forms the producer has on hand — per-client
 trees, per-shard stacked ``(M, ...)`` trees, or per-shard pre-flattened
 ``(M, P)`` matrices — and each store consumes the richest form it supports
 (``wants`` advertises the preferred one so the round engine can compute it
-in-jit).  Stores register themselves in the ``STORES`` registry under the
+in-jit).  ``CodedStore`` additionally accepts a whole stage of slices
+already Lagrange-encoded *inside* the stage-program engine's XLA program
+(``put_stage_encoded`` — zero store-side encode dispatches).  Stores register themselves in the ``STORES`` registry under the
 name used by ``FLSimulator``/``ScenarioConfig`` (``full`` / ``uncoded`` /
 ``coded``); third-party stores are one ``@register_store`` away.
 
@@ -370,6 +372,32 @@ class CodedStore:
         self._pending.append((rnd, w))
         if len(self._pending) >= self.group_rounds:
             self.flush()
+
+    def put_stage_encoded(self, coded: jnp.ndarray, row_spec,
+                          row_len: int) -> None:
+        """Whole-stage write for the stage-program engine: ``coded`` is the
+        ``(G, C, Pmax)`` slice tensor already Lagrange-encoded *inside* the
+        training program (``coding.encode_rounds`` fused after the round
+        scan), so the store does no encode dispatch at all — it only registers
+        per-round views and accounts bytes/FLOPs exactly like the fused
+        ``_put_flat``+``flush`` path (same shapes, same dtype).
+
+        ``row_spec``/``row_len`` carry the per-client re-assembly geometry
+        (every shard must have the same client count — the stage engine's
+        stackability precondition, which ``train_stage`` checks before
+        selecting this path).
+        """
+        layout, specs = [], []
+        for s in sorted(self.shard_clients):
+            cs = list(self.shard_clients[s])
+            layout.append((s, cs))
+            specs.append(coding.StackedRowSpec(tuple(cs), row_len, row_spec))
+        specs = tuple(specs)
+        for g in range(int(coded.shape[0])):
+            self._slices[g] = coded[g]
+            self._layouts[g] = layout
+            self._specs[g] = specs
+            self._account_stored(coded[g])
 
     def flush(self):
         """Encode all deferred rounds in one batched coded matmul."""

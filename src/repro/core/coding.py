@@ -157,6 +157,28 @@ def encode_batched(scheme: CodingScheme, mats: Sequence[jnp.ndarray],
     return outs
 
 
+def encode_rounds(enc: jnp.ndarray, hist: jnp.ndarray,
+                  use_kernel: bool = False, out_dtype=None) -> jnp.ndarray:
+    """All-rounds Lagrange encode: ``hist (G, S, P) -> (G, C, P)`` in one op.
+
+    ``enc`` is the (C, S) encode matrix (``CodingScheme.encode_matrix`` as a
+    device array).  Fully traceable — this is the encode the stage-program
+    engine fuses *into* the training program, replacing ``encode_batched``'s
+    separate dispatch.  Per-round columns are identical math to
+    ``encode(scheme, hist[g])``.  jnp path: one batched einsum over the round
+    axis.  Kernel path: a (G, C_tiles, P_tiles)-grid Pallas matmul that
+    streams each round's (S, block_p) tile through the MXU with NO
+    concatenate copy (``encode_batched``'s kernel path concatenated the
+    rounds host-visibly first).
+    """
+    if use_kernel:
+        from repro.kernels.coded_matmul.ops import coded_matmul_rounds
+        return coded_matmul_rounds(enc, hist, out_dtype=out_dtype)
+    out = jnp.einsum("cs,gsp->gcp", enc.astype(jnp.float32),
+                     hist.astype(jnp.float32))
+    return out.astype(out_dtype) if out_dtype is not None else out
+
+
 def encode_decode(scheme: CodingScheme, shard_params: jnp.ndarray,
                   client_ids: Optional[Sequence[int]] = None,
                   use_kernel: bool = False) -> jnp.ndarray:

@@ -48,11 +48,12 @@ class ScenarioConfig:
     local_batch: Optional[int] = None
     # orchestration
     store: str = "coded"
-    engine: str = "fused"
+    engine: str = "fused"                # "stage" | "fused" | "legacy"
     encode_group: Optional[int] = None
     slice_dtype: object = None
     num_stages: int = 1
     schedule: Optional[RequestSchedule] = None
+    batch_requests: bool = False         # merge requests due after each stage
 
     def fl_config(self) -> FLConfig:
         return FLConfig(num_clients=self.num_clients,
@@ -126,7 +127,8 @@ def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:
     sim, test = build_simulator(cfg)
     session = FederatedSession(sim, store_kind=cfg.store, engine=cfg.engine,
                                encode_group=cfg.encode_group,
-                               slice_dtype=cfg.slice_dtype)
+                               slice_dtype=cfg.slice_dtype,
+                               batch_requests=cfg.batch_requests)
     return session, test
 
 

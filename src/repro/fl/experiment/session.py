@@ -8,8 +8,12 @@ back-to-back against one simulator and serves a stream of unlearning
 requests scheduled between stages: each request is dispatched to its
 registered framework on **only the impacted stages** (those whose plan
 contains a requested client) and, within each, only the impacted shards
-retrain.  Per-stage wall time, store accounting, retraining cost, and the
-unlearning results accumulate into a ``SessionReport`` with JSON export.
+retrain.  With ``batch_requests=True`` all requests due after a stage are
+grouped and served as ONE merged request per compatible option set, so each
+impacted shard retrains once per batch instead of once per request (the
+concurrent-request serving mode).  Per-stage wall time, store accounting,
+retraining cost, and the unlearning results accumulate into a
+``SessionReport`` with JSON export.
 """
 from __future__ import annotations
 
@@ -141,13 +145,14 @@ class FederatedSession:
 
     def __init__(self, sim, store_kind: str = "coded", engine: str = "fused",
                  encode_group: Optional[int] = None, slice_dtype=None,
-                 rounds: Optional[int] = None):
+                 rounds: Optional[int] = None, batch_requests: bool = False):
         self.sim = sim
         self.store_kind = store_kind
         self.engine = engine
         self.encode_group = encode_group
         self.slice_dtype = slice_dtype
         self.rounds = rounds
+        self.batch_requests = batch_requests
         self.records: List[object] = []          # StageRecord per stage
         self.report = SessionReport(store_kind=store_kind)
 
@@ -212,14 +217,55 @@ class FederatedSession:
             results.append(res)
         return results
 
+    def unlearn_batch(self, requests: Sequence[UnlearnRequest]):
+        """Serve a group of requests together: requests with compatible
+        serving options (framework, rounds, explicit stages, apply) merge
+        into ONE request over the union of their clients, so each impacted
+        shard retrains once per batch instead of once per request (and the
+        SE framework can vmap the impacted shards into a single
+        ``calib_stage`` dispatch).
+
+        Note the merged semantics: every produced model has ALL of the
+        batch's clients removed — the concurrent-request serving mode
+        (paper Fig. 4), not N independent counterfactuals.  Returns the
+        flat list of per-stage ``UnlearnResult``s (one per merged group per
+        impacted stage).
+        """
+        if not self.records:
+            raise RuntimeError("no completed stages to unlearn from")
+        plan = self.records[-1].plan
+        groups: dict = {}
+        for r in requests:
+            key = (r.framework, r.rounds,
+                   tuple(r.stages) if r.stages is not None else None, r.apply)
+            clients = groups.setdefault(key, [])
+            for c in r.resolve_clients(plan):
+                if c not in clients:
+                    clients.append(c)
+        results = []
+        for (fw, rounds, stages, apply), clients in groups.items():
+            merged = UnlearnRequest(clients, framework=fw, rounds=rounds,
+                                    stages=list(stages) if stages else None,
+                                    apply=apply)
+            results.extend(self.unlearn(merged))
+        return results
+
     # ------------------------------------------------------------------- run
     def run(self, num_stages: int,
             schedule: Optional[RequestSchedule] = None) -> SessionReport:
         """K stages back-to-back; after stage k, serve every scheduled
-        request with ``after_stage == k``."""
+        request with ``after_stage == k`` — one by one, or merged per batch
+        when the session was built with ``batch_requests=True``."""
         for k in range(num_stages):
             self.run_stage()
-            if schedule is not None:
-                for req in schedule.due(k):
+            if schedule is None:
+                continue
+            due = schedule.due(k)
+            if not due:
+                continue
+            if self.batch_requests:
+                self.unlearn_batch(due)
+            else:
+                for req in due:
                     self.unlearn(req)
         return self.report

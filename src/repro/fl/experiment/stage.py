@@ -5,14 +5,28 @@ This is the training half of the experiment layer: ``train_stage(sim, ...)``
 runs G FedAvg rounds for every shard of a freshly sampled stage and writes
 each round's parameters into the store through the single
 ``ParameterStore.put_round(RoundPayload)`` entry point.  The store's
-``wants`` attribute tells the fused engine which payload form to compute
-*inside* the jitted round step ("flat" for the coded store, "stacked" for
-the uncoded ones), so the store choice never forces a host round-trip.
+``wants`` attribute tells the engine which payload form to compute *inside*
+the jitted round step ("flat" for the coded store, "stacked" for the uncoded
+ones), so the store choice never forces a host round-trip.
+
+Three engines (dispatch count per stage in parentheses):
+
+* ``engine="stage"`` — the whole-stage superfusion (O(1)): shard data stacked
+  to (S, M, n, ...), ``shard_round`` vmapped over shards, ``lax.scan`` over
+  the G rounds, and the coded store's Lagrange encode fused into the same
+  program — one dispatch produces final models, round globals, update norms,
+  and the coded slices.  Ragged stages (unequal client or sample counts per
+  shard) degrade gracefully to the fused per-shard path.
+* ``engine="fused"`` (default) — one jitted ``shard_round`` per (shard,
+  round) plus one deferred batched encode (G·S + 1).
+* ``engine="legacy"`` — the seed per-client path (≫ G·S·M), kept for A/B
+  benchmarking.
 
 ``FLSimulator.train_stage`` is a deprecated shim over this function.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -23,6 +37,8 @@ from repro.checkpoint.store import RoundPayload
 from repro.core import coding, unlearning
 from repro.models import init_params
 
+ENGINES = ("stage", "fused", "legacy")
+
 
 def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
                 engine: str = "fused", encode_group: Optional[int] = None,
@@ -30,22 +46,27 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     """One stage: sample clients, split into shards, G FedAvg rounds per
     shard, storing intermediate params in the requested (registered) store.
 
-    ``engine="fused"`` (default) keeps everything stacked/device-resident
-    (see ``repro.fl.simulator`` module docstring); ``engine="legacy"`` is the
-    seed per-client path, kept for A/B benchmarking.  ``encode_group``
-    batches that many rounds per coded encode (default: all G in one).
-    ``slice_dtype`` optionally stores coded slices in e.g. bf16.
+    ``engine`` selects the round engine (see module docstring):
+    ``"stage"`` (one dispatch per stage), ``"fused"`` (default, one per
+    shard-round), or ``"legacy"`` (the seed per-client path, for A/B).
+    ``encode_group`` batches that many rounds per coded encode on the fused
+    engine (default: all G in one; the stage engine always encodes all G
+    inside the program).  ``slice_dtype`` optionally stores coded slices in
+    e.g. bf16.
 
     Returns a ``StageRecord``.
     """
-    from repro.fl.simulator import StageRecord
-
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
     if engine == "legacy":
         if encode_group is not None or slice_dtype is not None:
-            raise ValueError("encode_group/slice_dtype need engine='fused'")
+            raise ValueError("encode_group/slice_dtype need engine="
+                             "'fused' or 'stage'")
         return _train_stage_legacy(sim, store_kind, rounds)
-    if engine != "fused":
-        raise ValueError(f"unknown engine {engine!r}; use 'fused' or 'legacy'")
+    if engine == "stage" and encode_group is not None:
+        raise ValueError("encode_group is a fused-engine option; the stage "
+                         "engine always encodes all rounds in-program")
+
     fl = sim.fl
     g_rounds = rounds or fl.global_rounds
     plan = sim.mgr.new_stage()
@@ -57,6 +78,90 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     # the store's preferred payload form decides what the jitted round step
     # computes on device; anything unknown degrades to stacked trees.
     kind = "flat" if getattr(store, "wants", "stacked") == "flat" else "stacked"
+    data = {s: sim._stack_client_data(cs)
+            for s, cs in plan.shard_clients.items()}
+
+    if engine == "stage":
+        if _stackable(plan, data):
+            return _run_stage_program(sim, plan, store, w0, data, g_rounds,
+                                      kind, slice_dtype)
+        warnings.warn(
+            "ragged stage (unequal client or sample counts per shard); "
+            "stage engine degrading to per-shard fused dispatch",
+            stacklevel=2)
+    return _run_fused(sim, plan, store, w0, data, g_rounds, kind)
+
+
+def _stackable(plan, data) -> bool:
+    """The stage program needs one (S, M, n, ...) stack: every shard must
+    hold the same number of clients with the same per-client sample count."""
+    shapes = {data[s][0].shape for s in plan.shard_clients}
+    return len(shapes) == 1
+
+
+def _flat_row_len(w0) -> int:
+    """Per-client flat parameter length P (host-side, no device work)."""
+    return sum(int(np.prod(l.shape)) if l.shape else 1
+               for l in jax.tree.leaves(w0))
+
+
+def _run_stage_program(sim, plan, store, w0, data, g_rounds, kind,
+                       slice_dtype):
+    """The whole-stage superfusion: ONE jitted dispatch runs all G rounds of
+    all S shards and (for the coded store) the Lagrange encode."""
+    from repro.fl.simulator import StackedRoundGlobals, StageRecord
+
+    fl = sim.fl
+    shards = sorted(plan.shard_clients)
+    xs = jnp.stack([data[s][0] for s in shards])      # (S, M, n, ...)
+    ys = jnp.stack([data[s][1] for s in shards])
+    # in-program encode only when the store can register pre-encoded slices
+    encode = kind == "flat" and hasattr(store, "put_stage_encoded")
+    use_kernel = bool(getattr(store, "use_kernel", False))
+    prog = sim._get_stage_program(fl.local_epochs, kind, g_rounds,
+                                  encode=encode, out_dtype=slice_dtype,
+                                  use_kernel=use_kernel)
+    row_spec = coding.tree_to_flat(w0)[1] if kind == "flat" else None
+    if encode:
+        enc = jnp.asarray(store.scheme.encode_matrix(), jnp.float32)
+        final, round_in, hist, norms_dev = prog(w0, xs, ys, enc)
+        store.put_stage_encoded(hist, row_spec,
+                                row_len=_flat_row_len(w0))
+    else:
+        final, round_in, hist, norms_dev = prog(w0, xs, ys)
+        for g in range(g_rounds):
+            if kind == "flat":
+                payload = RoundPayload.from_flat(
+                    g, plan.shard_clients,
+                    {s: hist[g, i] for i, s in enumerate(shards)}, row_spec)
+            else:
+                payload = RoundPayload.from_stacked(
+                    g, plan.shard_clients,
+                    {s: jax.tree.map(lambda a, g=g, i=i: a[g, i], hist)
+                     for i, s in enumerate(shards)})
+            store.put_round(payload)
+    store.flush()
+    shard_models = {s: jax.tree.map(lambda a, i=i: a[i], final)
+                    for i, s in enumerate(shards)}
+    round_globals = {s: StackedRoundGlobals(round_in, final, i)
+                     for i, s in enumerate(shards)}
+    # ONE host sync for every stored-update norm of the stage
+    arr = np.asarray(jax.device_get(norms_dev))        # (G, S, M)
+    norms = {}
+    for i, s in enumerate(shards):
+        for g in range(g_rounds):
+            for j, c in enumerate(plan.shard_clients[s]):
+                norms[(s, g, c)] = float(arr[g, i, j])
+    return StageRecord(plan, shard_models, round_globals, store,
+                       history_norms=norms)
+
+
+def _run_fused(sim, plan, store, w0, data, g_rounds, kind):
+    """Fused per-shard engine: one jitted ``shard_round`` per (shard, round),
+    everything stacked/device-resident (see ``repro.fl.simulator``)."""
+    from repro.fl.simulator import StageRecord
+
+    fl = sim.fl
     step = sim._shard_round[(fl.local_epochs, kind)]
     row_spec = coding.tree_to_flat(w0)[1] if kind == "flat" else None
 
@@ -65,7 +170,6 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     # S shards — eq. 5/6 mixes one round's shard vectors).
     shards = sorted(plan.shard_clients)
     ws = {s: w0 for s in shards}
-    data = {s: sim._stack_client_data(plan.shard_clients[s]) for s in shards}
     round_globals = {s: [] for s in shards}
     norms_dev = {s: [] for s in shards}
     for g in range(g_rounds):

@@ -20,34 +20,44 @@ training/calibration steps, and evaluation.  Orchestration lives in
 ``FLSimulator.train_stage`` / ``FLSimulator.unlearn`` remain as deprecated
 thin shims over those entry points.
 
-Round engine
-------------
-The hot loop keeps client parameters **stacked (M, ...) on device** from
-local training through FedAvg, calibration, and coded encoding:
+Round engines
+-------------
+Three selectable engines cover the dispatch-count spectrum
+(``train_stage(..., engine=...)``; see ``repro.fl.experiment.stage``):
 
-* ``shard_round`` (jitted, one dispatch per shard per round) runs the vmapped
-  local training and, in the same XLA program, computes the FedAvg mean
-  (``tree.map(mean(0))``), the per-client update norms as one (M,) reduction,
-  and — for the coded store — the stacked (M, P) flat parameter matrix
-  (``coding.tree_to_flat_stacked``). No per-client unstack, no per-scalar
-  host pulls: stored-update norms are fetched ONCE per stage as arrays.
-* The coded store takes the pre-flattened matrices with specs and padding
-  cached per stage, and defers the Lagrange encode so G rounds are batched
-  into a single (S, G*P) coded matmul.
-* SE/FE calibrated retraining (eq. 3) runs through ``calib_round`` — vmapped
-  retraining plus ``unlearning.calibrate_stacked`` fused in one jit — instead
-  of a per-client Python loop over pytrees.
+* ``engine="stage"`` — the whole-stage superfusion: stage data is stacked to
+  ``(S, M, n, ...)``, ``shard_round`` is ``vmap``-ed over the shard axis and
+  ``lax.scan``-ed over the G rounds, so ONE jitted dispatch produces the
+  entire stage — the ``(G+1, S, ...)`` round globals, the ``(G, S, M)``
+  update norms, and (for the coded store) the coded slices themselves: the
+  ``(C, S)`` Lagrange encode matrix is applied to the ``(G, S, M*P)`` flat
+  history via einsum *inside the same XLA program*
+  (``coding.encode_rounds``), eliminating the separate encode dispatch.
+  Ragged stages (unequal clients or sample counts per shard) degrade
+  gracefully to the per-shard fused path.
+* ``engine="fused"`` — one jitted ``shard_round`` per (shard, round): vmapped
+  local training, FedAvg mean, the per-client update norms as one (M,)
+  reduction, and the stacked (M, P) flat parameter matrix
+  (``coding.tree_to_flat_stacked``) all in one program; the coded store
+  defers the Lagrange encode so G rounds batch into a single coded matmul.
+  G·S + 1 dispatches per stage.
+* ``engine="legacy"`` — the seed per-client path (unstack, per-scalar norm
+  pulls, per-round flatten+encode), kept for A/B benchmarking
+  (``benchmarks/fig6_round_engine.py``) and equivalence tests
+  (``tests/test_round_engine.py``).
 
-The seed per-client path is kept callable via ``train_stage(...,
-engine="legacy")`` for A/B benchmarking (``benchmarks/fig6_round_engine.py``)
-and numerical-equivalence tests (``tests/test_round_engine.py``).
+SE/FE calibrated retraining (eq. 3) runs through ``calib_round`` — vmapped
+retraining plus ``unlearning.calibrate_stacked`` fused in one jit — and, when
+several shards retrain together (batched unlearning requests), through the
+``calib_stage`` program: the impacted shards vmapped together and the G'
+calibration rounds scanned, one dispatch for the whole retraining pass.
 """
 from __future__ import annotations
 
 import json
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,11 +72,43 @@ from repro.optim import make_optimizer
 from repro.optim.fisher import diag_fisher, fisher_precondition
 
 
+class StackedRoundGlobals:
+    """List-like view of one shard's per-round global models, backed by the
+    stage program's stacked ``(G, S, ...)`` output — length G+1 like the
+    materialized per-shard lists, but each element is sliced out of the
+    stacked buffers only on access (the stage engine dispatches nothing for
+    bookkeeping it never reads)."""
+
+    def __init__(self, round_inputs, final, shard_index: int):
+        self._inputs = round_inputs               # (G, S, ...) stacked tree
+        self._final = final                       # (S, ...) stacked tree
+        self._idx = shard_index
+        self._len = int(jax.tree.leaves(round_inputs)[0].shape[0]) + 1
+
+    def __len__(self) -> int:
+        return self._len
+
+    def __getitem__(self, g):
+        if isinstance(g, slice):
+            return [self[i] for i in range(*g.indices(self._len))]
+        if g < 0:
+            g += self._len
+        if not 0 <= g < self._len:
+            raise IndexError(g)
+        if g == self._len - 1:
+            return jax.tree.map(lambda a: a[self._idx], self._final)
+        return jax.tree.map(lambda a, g=g: a[g, self._idx], self._inputs)
+
+    def __iter__(self):
+        return (self[i] for i in range(self._len))
+
+
 @dataclass
 class StageRecord:
     plan: StagePlan
     shard_models: Dict[int, object]               # final per-shard globals
-    round_globals: Dict[int, List[object]]        # shard -> [w^g inputs], len G+1
+    round_globals: Dict[int, object]              # shard -> [w^g inputs],
+    # len G+1 (a list, or a lazy StackedRoundGlobals view for engine="stage")
     store: object                                 # parameter store
     history_norms: Dict[Tuple[int, int, int], float] = field(default_factory=dict)
     # (shard, round, client) -> ||delta|| of the stored update
@@ -177,10 +219,23 @@ class FLSimulator:
             deltas = unlearning.stacked_sub(locals_, params)
             return unlearning.calibrate_stacked(params, deltas, stored_norms)
 
+        def calib_stage(ws, xs, ys, nmats, epochs):
+            """The whole calibrated-retraining pass of a batch of impacted
+            shards in ONE program: ``calib_round`` vmapped over the K shards,
+            ``lax.scan``-ed over the G' rounds.  ws: stacked (K, ...) initial
+            models; xs/ys: (K, M', n, ...); nmats: (G', K, M') stored norms."""
+            def body(w, nrow):
+                w2 = jax.vmap(lambda wi, x, y, n:
+                              calib_round(wi, x, y, n, epochs))(w, xs, ys, nrow)
+                return w2, None
+            out, _ = jax.lax.scan(body, ws, nmats)
+            return out
+
         # vmap over clients: stacked data (M, n, ...), shared initial params
         self._local_train = {}
         self._shard_round = {}
         self._calib_round = {}
+        self._calib_stage = {}
         for ep in set([self.fl.local_epochs,
                        max(int(self.fl.local_epochs / self.fl.retrain_ratio), 1)]):
             self._local_train[ep] = jax.jit(
@@ -195,8 +250,64 @@ class FLSimulator:
                     shard_round(p, x, y, e, pay))
             self._calib_round[ep] = jax.jit(
                 lambda p, x, y, n, e=ep: calib_round(p, x, y, n, e))
+            self._calib_stage[ep] = jax.jit(
+                lambda w, x, y, n, e=ep: calib_stage(w, x, y, n, e))
         self._stacked_mean = jax.jit(unlearning.stacked_mean)
         self._grad_fn = jax.jit(jax.grad(lambda p, b: lf(p, b)[0]))
+        self._shard_round_fn = shard_round      # unjitted: stage-program body
+        self._stage_programs = {}               # (ep, kind, G, enc?, ...) -> jit
+        self._eval_stats = jax.jit(self._eval_stats_fn)
+
+    def _get_stage_program(self, epochs: int, kind: str, g_rounds: int,
+                           encode: bool, out_dtype=None,
+                           use_kernel: bool = False):
+        """Build (and cache) the whole-stage program for ``engine="stage"``:
+        ``shard_round`` vmapped over the S shards and scanned over the G
+        rounds, with the coded store's Lagrange encode fused into the same
+        XLA program (``coding.encode_rounds``) when ``encode``.
+
+        Returns a jitted ``program(w0, xs, ys[, enc])`` producing
+        ``(final (S, ...), round_inputs (G, S, ...), history, norms (G, S, M))``
+        where ``history`` is the coded ``(G, C, M*P)`` slices (``encode``),
+        the flat ``(G, S, M, P)`` matrices (``kind == "flat"``), or the
+        stacked per-round trees (``kind == "stacked"``).
+        """
+        key = (epochs, kind, g_rounds, encode, out_dtype, use_kernel)
+        prog = self._stage_programs.get(key)
+        if prog is not None:
+            return prog
+        shard_round = self._shard_round_fn
+
+        def stage_body(w0, xs, ys):
+            s = xs.shape[0]
+            ws0 = jax.tree.map(
+                lambda a: jnp.broadcast_to(a.astype(jnp.float32),
+                                           (s,) + a.shape), w0)
+
+            def body(ws, _):
+                new_ws, out, norms = jax.vmap(
+                    lambda p, x, y: shard_round(p, x, y, epochs, kind)
+                )(ws, xs, ys)
+                return new_ws, (ws, out, norms)
+
+            final, (round_in, hist, norms) = jax.lax.scan(
+                body, ws0, None, length=g_rounds)
+            return final, round_in, hist, norms
+
+        if encode:
+            def program(w0, xs, ys, enc):
+                final, round_in, hist, norms = stage_body(w0, xs, ys)
+                g, s = hist.shape[:2]
+                coded = coding.encode_rounds(enc, hist.reshape(g, s, -1),
+                                             use_kernel=use_kernel,
+                                             out_dtype=out_dtype)
+                return final, round_in, coded, norms
+        else:
+            def program(w0, xs, ys):
+                return stage_body(w0, xs, ys)
+        prog = jax.jit(program)
+        self._stage_programs[key] = prog
+        return prog
 
     def _make_batch(self, x, y):
         if self.task == "image":
@@ -268,9 +379,50 @@ class FLSimulator:
         return fisher
 
     # ------------------------------------------------------------- evaluate
+    def _eval_stats_fn(self, stacked_models, xb, yb):
+        """One jitted pass over all eval batches: ``predict_fn`` vmapped over
+        the stacked (K, ...) ensemble, ``lax.scan`` over the (B, batch, ...)
+        batches, correct/loss accumulated on device."""
+        def body(carry, xy):
+            x, y = xy
+            b = self._make_batch(x, y)
+            logits = jax.vmap(lambda m: self._pf(m, b))(stacked_models)
+            lg = logits.astype(jnp.float32).sum(0) / logits.shape[0]
+            ll = jax.nn.log_softmax(lg, -1)
+            correct = (lg.argmax(-1) == y).sum()
+            loss = -jnp.take_along_axis(ll, y[..., None], axis=-1).sum()
+            c, l = carry
+            return (c + correct, l + loss), None
+        init = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+        (correct, loss), _ = jax.lax.scan(body, init, (xb, yb))
+        return correct, loss
+
     def evaluate(self, models: Dict[int, object], xs: np.ndarray,
                  ys: np.ndarray, batch: int = 200) -> Dict[str, float]:
-        """Ensemble evaluation: mean logits across shard models (SISA-style)."""
+        """Ensemble evaluation: mean logits across shard models (SISA-style).
+
+        The shard models are stacked to one (K, ...) tree and ``predict_fn``
+        is vmapped over the ensemble inside a single jitted eval step that
+        scans all batches — one host pull per eval instead of one per batch
+        per model (the seed loop is kept as ``evaluate_host`` for
+        equivalence testing)."""
+        batch = min(batch, len(xs))
+        nb = len(xs) // batch
+        if nb == 0:
+            return {"acc": 0.0, "loss": 0.0}
+        xb = jnp.asarray(xs[:nb * batch]).reshape(nb, batch, *xs.shape[1:])
+        yb = jnp.asarray(ys[:nb * batch]).reshape(nb, batch, *ys.shape[1:])
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *models.values())
+        correct, loss = jax.device_get(self._eval_stats(stacked, xb, yb))
+        total = nb * batch * (1 if self.task == "image"
+                              else int(np.prod(ys.shape[1:])))
+        return {"acc": int(correct) / max(total, 1),
+                "loss": float(loss) / max(total, 1)}
+
+    def evaluate_host(self, models: Dict[int, object], xs: np.ndarray,
+                      ys: np.ndarray, batch: int = 200) -> Dict[str, float]:
+        """Seed per-batch-per-model eval loop — reference implementation for
+        ``evaluate`` equivalence tests."""
         total, correct, loss_sum = 0, 0, 0.0
         batch = min(batch, len(xs))
         for i in range(0, len(xs) - batch + 1, batch):

@@ -9,6 +9,13 @@ output tile inside VMEM instead of materialising a (C, block_p) stripe. The
 block_p) parameter tile across the C tiles. Output may be stored as bf16
 (halves the coded-slice HBM/storage footprint; decode re-accumulates in f32).
 
+``coded_matmul_rounds_kernel`` — the same coefficient matrix against a
+G-round history ``(G, S, P)`` on a 3-D ``(G, C_tiles, P_tiles)`` grid: each
+round's (S, block_p) tile streams through the MXU directly from its slot in
+the stacked history — no host-side concatenate of the rounds (the 2-D kernel
+required a (S, G*P) copy to batch rounds).  This is the encode the
+stage-program engine fuses into the training program.
+
 ``encode_decode_kernel`` — fused code round-trip ``D @ (B @ w)``: per P-tile
 the (C, block_p) coded intermediate lives only in VMEM/registers, never HBM.
 This is the verification path (encode then immediately re-decode to check a
@@ -58,6 +65,45 @@ def coded_matmul_kernel(coeff: jnp.ndarray, w: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((block_c, block_p), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((c, p), out_dtype),
+        interpret=interpret,
+    )(coeff.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def _rounds_kernel(coeff_ref, w_ref, o_ref):
+    o_ref[0] = jax.lax.dot(
+        coeff_ref[...], w_ref[0],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_p", "out_dtype",
+                                    "interpret"))
+def coded_matmul_rounds_kernel(coeff: jnp.ndarray, w: jnp.ndarray, *,
+                               block_c: int = 128,
+                               block_p: int = 4096,
+                               out_dtype=jnp.float32,
+                               interpret: bool = False) -> jnp.ndarray:
+    """coeff: (C, S); w: (G, S, P) with C a multiple of block_c, S of 8 and P
+    of block_p (the ops wrapper pads).  Returns (G, C, P): per-round
+    ``coeff @ w[g]`` on a (G, C_tiles, P_tiles) grid — the (block_c, S)
+    coefficient tile is revisited across rounds and P tiles; each round's
+    (S, block_p) tile is read once, straight from the stacked history."""
+    c, s = coeff.shape
+    g, s2, p = w.shape
+    assert s == s2 and p % block_p == 0 and c % block_c == 0, \
+        (coeff.shape, w.shape, block_c, block_p)
+    grid = (g, c // block_c, p // block_p)
+    return pl.pallas_call(
+        _rounds_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, s), lambda r, i, j: (i, 0)),
+            pl.BlockSpec((1, s, block_p), lambda r, i, j: (r, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_p),
+                               lambda r, i, j: (r, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, c, p), out_dtype),
         interpret=interpret,
     )(coeff.astype(jnp.float32), w.astype(jnp.float32))
 

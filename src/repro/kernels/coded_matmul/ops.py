@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels import on_tpu
 from repro.kernels.coded_matmul.kernel import (coded_matmul_kernel,
+                                               coded_matmul_rounds_kernel,
                                                encode_decode_kernel)
 
 
@@ -38,6 +39,24 @@ def coded_matmul(coeff: jnp.ndarray, w: jnp.ndarray,
                               out_dtype=out_dtype or jnp.float32,
                               interpret=not on_tpu())
     return out[:c, :p]
+
+
+def coded_matmul_rounds(coeff: jnp.ndarray, w: jnp.ndarray,
+                        block_p: int = 4096, block_c: int = 128,
+                        out_dtype: Optional[jnp.dtype] = None) -> jnp.ndarray:
+    """(C,S) @ (G,S,P) -> (G,C,P): all-rounds encode on a 3-D grid, no
+    concatenate copy of the round history.  Accumulation is always f32."""
+    c, s = coeff.shape
+    _, _, p = w.shape
+    block_p = min(block_p, max(128, ((p + 127) // 128) * 128))
+    block_c = min(block_c, max(8, ((c + 7) // 8) * 8))
+    coeff_p = _pad_to(_pad_to(coeff, 0, block_c), 1, 8)
+    w_p = _pad_to(_pad_to(w, 1, 8), 2, block_p)
+    out = coded_matmul_rounds_kernel(coeff_p, w_p, block_c=block_c,
+                                     block_p=block_p,
+                                     out_dtype=out_dtype or jnp.float32,
+                                     interpret=not on_tpu())
+    return out[:, :c, :p]
 
 
 def coded_encode_decode(enc: jnp.ndarray, dec: jnp.ndarray, w: jnp.ndarray,

@@ -85,6 +85,125 @@ class TestErrors:
         assert _scheme(100, 4).max_errors == 48
 
 
+class TestErrorDecodingPaths:
+    """Error-correcting decode beyond the BW happy path: consensus (ransac)
+    localization, the BW→ransac fallback, and the full ``decode_with_errors``
+    pipeline under corruption at the paper's C=20/S=4 tolerance budget."""
+
+    C, S = 20, 4
+
+    def _corrupted(self, bad, p=96, scale=10.0, seed=0):
+        sch = _scheme(self.C, self.S)
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.standard_normal((self.S, p)), jnp.float32)
+        slices = np.array(coding.encode(sch, w), np.float64)
+        slices[bad] += rng.standard_normal((len(bad), p)) * scale
+        return sch, w, slices
+
+    def test_ransac_locates_errors(self):
+        bad_true = [0, 4, 9, 13, 17]
+        sch, _, slices = self._corrupted(bad_true)
+        bad = coding.locate_errors(sch, slices, method="ransac")
+        assert sorted(bad.tolist()) == bad_true
+
+    def test_ransac_no_error_fast_path(self):
+        sch, _, slices = self._corrupted([], seed=1)
+        assert coding.locate_errors(sch, slices, method="ransac").size == 0
+
+    def test_bw_matches_ransac(self):
+        bad_true = [2, 6, 10, 15]
+        sch, _, slices = self._corrupted(bad_true, seed=2)
+        bw = coding.locate_errors(sch, slices, method="bw")
+        rs = coding.locate_errors(sch, slices, method="ransac")
+        assert sorted(bw.tolist()) == sorted(rs.tolist()) == bad_true
+
+    def test_bw_falls_back_to_ransac(self, monkeypatch):
+        """When the BW least-squares localization is degenerate (here:
+        sabotaged to return zeros, so the error-locator polynomial flags the
+        wrong rows), the self-consistency verification must reject it and the
+        consensus fallback must still recover the true corrupted set."""
+        bad_true = [0, 4, 9, 13, 17]
+        sch, _, slices = self._corrupted(bad_true)
+        calls = {"lstsq": 0}
+
+        def broken_lstsq(a, b, rcond=None):
+            calls["lstsq"] += 1
+            return np.zeros(a.shape[1]), None, None, None
+
+        monkeypatch.setattr(np.linalg, "lstsq", broken_lstsq)
+        bad = coding.locate_errors(sch, slices, method="bw")
+        assert calls["lstsq"] > 0            # the BW branch actually ran
+        assert sorted(bad.tolist()) == bad_true
+
+    def test_decode_with_errors_at_max_budget(self):
+        """Full pipeline at mu*C = (C-S)/2 = 8 corrupted slices of 20 —
+        the paper's eq. (11) tolerance boundary."""
+        bad_true = [1, 3, 5, 7, 11, 14, 16, 19]
+        sch, w, slices = self._corrupted(bad_true, seed=3)
+        assert len(bad_true) == sch.max_errors
+        out, bad = coding.decode_with_errors(
+            sch, jnp.asarray(slices, jnp.float32))
+        assert sorted(bad.tolist()) == bad_true
+        np.testing.assert_allclose(np.asarray(out), np.asarray(w),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_decode_with_errors_through_coded_store(self):
+        """CodedStore.get_shard(corrupt=...) routes through the
+        error-correcting decode and still reconstructs every client tree."""
+        from repro.checkpoint.store import CodedStore, RoundPayload
+
+        sch = _scheme(self.C, self.S)
+        shard_clients = {s: [2 * s, 2 * s + 1] for s in range(self.S)}
+        _, row_spec = coding.tree_to_flat({"w": jnp.zeros((6,), jnp.float32)})
+        rng = np.random.default_rng(4)
+        flats = {s: jnp.asarray(rng.standard_normal((2, 6)), jnp.float32)
+                 for s in range(self.S)}
+        store = CodedStore(sch, shard_clients)
+        store.put_round(RoundPayload.from_flat(0, shard_clients, flats,
+                                               row_spec))
+        store.flush()
+        corrupt = np.zeros((self.C, 12))
+        corrupt[[2, 8, 12]] = rng.standard_normal((3, 12)) * 10.0
+        got = store.get_shard(0, 1, corrupt=corrupt)
+        assert sorted(got) == shard_clients[1]
+        for i, c in enumerate(shard_clients[1]):
+            np.testing.assert_allclose(np.asarray(got[c]["w"]),
+                                       np.asarray(flats[1][i]),
+                                       rtol=5e-3, atol=5e-3)
+
+
+class TestEncodeRounds:
+    def test_matches_per_round_encode(self):
+        sch = _scheme(16, 4)
+        rng = np.random.default_rng(5)
+        hist = jnp.asarray(rng.standard_normal((5, 4, 257)), jnp.float32)
+        enc = jnp.asarray(sch.encode_matrix(), jnp.float32)
+        out = coding.encode_rounds(enc, hist)
+        assert out.shape == (5, 16, 257)
+        for g in range(5):
+            np.testing.assert_allclose(np.asarray(out[g]),
+                                       np.asarray(coding.encode(sch, hist[g])),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_kernel_path_matches(self):
+        sch = _scheme(12, 3)
+        rng = np.random.default_rng(6)
+        hist = jnp.asarray(rng.standard_normal((3, 3, 100)), jnp.float32)
+        enc = jnp.asarray(sch.encode_matrix(), jnp.float32)
+        ref = coding.encode_rounds(enc, hist)
+        krn = coding.encode_rounds(enc, hist, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(krn),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_out_dtype(self):
+        sch = _scheme(8, 2)
+        hist = jnp.asarray(np.random.default_rng(7).standard_normal((2, 2, 32)),
+                           jnp.float32)
+        enc = jnp.asarray(sch.encode_matrix(), jnp.float32)
+        assert coding.encode_rounds(enc, hist,
+                                    out_dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
 class TestPytrees:
     def test_pytree_roundtrip(self):
         rng = jax.random.key(0)

@@ -241,6 +241,186 @@ class TestFusedEngineEquivalence:
                        for l in leaves), fw
 
 
+class TestStageEngineEquivalence:
+    """The whole-stage superfusion (engine='stage': scan-over-rounds x
+    vmap-over-shards + in-program Lagrange encode) must reproduce the fused
+    per-shard engine: shard models, stored coded slices, history norms, store
+    accounting — and its lazy round-globals view must behave like the
+    materialized lists."""
+
+    @pytest.fixture(scope="class")
+    def records(self):
+        s_fus, s_stg = _tiny_sim(), _tiny_sim()
+        return (train_stage(s_fus, store_kind="coded", engine="fused"),
+                train_stage(s_stg, store_kind="coded", engine="stage"), s_stg)
+
+    def test_shard_models_bit_for_bit(self, records):
+        r_fus, r_stg, _ = records
+        assert r_fus.plan.shard_clients == r_stg.plan.shard_clients
+        for s in r_fus.shard_models:
+            for a, b in zip(jax.tree.leaves(r_fus.shard_models[s]),
+                            jax.tree.leaves(r_stg.shard_models[s])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_coded_slices_match(self, records):
+        """In-program einsum encode vs the store's batched matmul encode —
+        bit-identical on CPU; the acceptance bound for the fused-encode path
+        is <=1e-5 rel."""
+        r_fus, r_stg, _ = records
+        assert set(r_fus.store._slices) == set(r_stg.store._slices)
+        for g, sl in r_fus.store._slices.items():
+            np.testing.assert_allclose(np.asarray(sl),
+                                       np.asarray(r_stg.store._slices[g]),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_history_norms_match(self, records):
+        r_fus, r_stg, _ = records
+        assert set(r_fus.history_norms) == set(r_stg.history_norms)
+        for k, v in r_fus.history_norms.items():
+            assert abs(v - r_stg.history_norms[k]) <= 1e-5 * max(abs(v), 1.0)
+
+    def test_store_accounting_matches(self, records):
+        r_fus, r_stg, _ = records
+        assert r_fus.store.stats == r_stg.store.stats
+
+    def test_round_globals_lazy_view(self, records):
+        r_fus, r_stg, _ = records
+        for s in r_stg.plan.shard_clients:
+            view = r_stg.round_globals[s]
+            ref = r_fus.round_globals[s]
+            assert len(view) == len(ref) == FL_TINY.global_rounds + 1
+            for g in (0, len(ref) - 1, -1):
+                for a, b in zip(jax.tree.leaves(ref[g]),
+                                jax.tree.leaves(view[g])):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+    def test_stored_round_reconstruction_matches(self, records):
+        r_fus, r_stg, _ = records
+        for s in r_fus.plan.shard_clients:
+            g_fus = r_fus.store.get_shard(0, s)
+            g_stg = r_stg.store.get_shard(0, s)
+            assert set(g_fus) == set(g_stg)
+            for c in g_fus:
+                for a, b in zip(jax.tree.leaves(g_fus[c]),
+                                jax.tree.leaves(g_stg[c])):
+                    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                               rtol=1e-5, atol=1e-5)
+
+    def test_unlearning_runs_on_stage_record(self, records):
+        _, r_stg, sim = records
+        victim = r_stg.plan.shard_clients[0][0]
+        for fw in ("SE", "FE", "FR", "RR"):
+            res = run_unlearn(sim, fw, r_stg, [victim], rounds=2)
+            leaves = jax.tree.leaves(list(res.models.values())[0])
+            assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
+                       for l in leaves), fw
+
+    def test_uncoded_store_stage_engine(self):
+        s_stg, s_fus = _tiny_sim(), _tiny_sim()
+        r_stg = train_stage(s_stg, store_kind="uncoded", engine="stage")
+        r_fus = train_stage(s_fus, store_kind="uncoded", engine="fused")
+        assert r_stg.store.stats.server_bytes == r_fus.store.stats.server_bytes
+        c = r_stg.plan.shard_clients[0][0]
+        for a, b in zip(jax.tree.leaves(r_stg.store.get(0, c)),
+                        jax.tree.leaves(r_fus.store.get(0, c))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_encode_group_rejected(self):
+        with pytest.raises(ValueError, match="fused-engine option"):
+            train_stage(_tiny_sim(), engine="stage", encode_group=2)
+
+    def test_ragged_stage_falls_back(self):
+        """Unequal per-client sample counts across shards break the (S, M, n)
+        stack — the stage engine must warn and degrade to the per-shard fused
+        path, producing the same record the fused engine would."""
+        cfg = dataclasses.replace(get_config("cnn-paper"), image_size=8,
+                                  d_model=16, cnn_channels=(4, 4))
+        data = make_image_data(8 * 30, image_size=8, seed=0)
+        clients = client_datasets_images(data, FL_TINY.num_clients, iid=True)
+        # shrink one client's dataset: its shard's n_min now differs
+        cid = sorted(clients)[0]
+        clients[cid] = (clients[cid][0][:11], clients[cid][1][:11])
+
+        def mk():
+            return FLSimulator(cfg, FL_TINY, clients, task="image",
+                               opt_cfg=OptimizerConfig(name="sgdm", lr=0.05,
+                                                       grad_clip=0.0),
+                               local_batch=10)
+
+        s_stg, s_fus = mk(), mk()
+        with pytest.warns(UserWarning, match="ragged stage"):
+            r_stg = train_stage(s_stg, store_kind="coded", engine="stage")
+        r_fus = train_stage(s_fus, store_kind="coded", engine="fused")
+        assert r_stg.plan.shard_clients == r_fus.plan.shard_clients
+        for s in r_fus.shard_models:
+            for a, b in zip(jax.tree.leaves(r_fus.shard_models[s]),
+                            jax.tree.leaves(r_stg.shard_models[s])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestBatchedCalibration:
+    """SE's multi-shard batched retraining (calib_stage: vmap over impacted
+    shards, scan over rounds) must match the per-shard sequential loop."""
+
+    def test_batched_matches_sequential(self):
+        from repro.fl.experiment.frameworks import (ShardedEraser,
+                                                    UnlearnContext)
+        sim = _tiny_sim()
+        rec = train_stage(sim, store_kind="coded", engine="stage")
+        victims = [rec.plan.shard_clients[0][0], rec.plan.shard_clients[1][0]]
+        fw = ShardedEraser()
+        ctx = UnlearnContext(sim, rec, victims, FL_TINY.global_rounds)
+        jobs = fw._prepare(ctx)
+        assert len(jobs) == 2 and fw._batchable(jobs)
+        m_bat, c_bat = fw._run_batched(ctx, jobs)
+        m_seq, c_seq = fw._run_sequential(ctx, jobs)
+        assert c_bat == c_seq
+        assert set(m_bat) == set(m_seq)
+        for s in m_seq:
+            for a, b in zip(jax.tree.leaves(m_seq[s]),
+                            jax.tree.leaves(m_bat[s])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_ragged_jobs_not_batchable(self):
+        from repro.fl.experiment.frameworks import (ShardedEraser,
+                                                    UnlearnContext)
+        sim = _tiny_sim()
+        rec = train_stage(sim, store_kind="coded", engine="fused")
+        # two victims in shard 0, one in shard 1: retained counts differ
+        victims = rec.plan.shard_clients[0][:2] + [rec.plan.shard_clients[1][0]]
+        fw = ShardedEraser()
+        ctx = UnlearnContext(sim, rec, list(victims), 2)
+        jobs = fw._prepare(ctx)
+        assert len(jobs) == 2 and not fw._batchable(jobs)
+        res = run_unlearn(sim, "SE", rec, list(victims), rounds=2)
+        assert res.impacted_shards == [0, 1]
+
+
+class TestVmappedEvaluate:
+    def test_matches_host_loop(self):
+        sim = _tiny_sim()
+        rec = train_stage(sim, store_kind="uncoded", rounds=1)
+        data = make_image_data(110, image_size=8, seed=9)
+        new = sim.evaluate(rec.shard_models, data.images, data.labels,
+                           batch=32)
+        ref = sim.evaluate_host(rec.shard_models, data.images, data.labels,
+                                batch=32)
+        assert new["acc"] == ref["acc"]
+        assert abs(new["loss"] - ref["loss"]) < 1e-4
+
+    def test_single_model_ensemble(self):
+        sim = _tiny_sim()
+        rec = train_stage(sim, store_kind="uncoded", rounds=1)
+        data = make_image_data(60, image_size=8, seed=10)
+        one = {0: rec.shard_models[0]}
+        new = sim.evaluate(one, data.images, data.labels, batch=30)
+        ref = sim.evaluate_host(one, data.images, data.labels, batch=30)
+        assert new["acc"] == ref["acc"]
+        assert abs(new["loss"] - ref["loss"]) < 1e-4
+
+
 class TestDeprecatedShims:
     """train_stage/unlearn stay callable on the simulator as thin wrappers
     over the experiment API: they warn, and their results are bit-identical

@@ -290,6 +290,86 @@ class TestSessionSemantics:
         assert s.records[s.report.stages[0].stage] is s.records[0]
 
 
+# ----------------------------------------------------- batched request serving
+class TestBatchedRequests:
+    """batch_requests=True merges the requests due after a stage: each
+    impacted shard retrains once per batch (union-of-clients semantics) and
+    the merged result equals one run_unlearn over the union."""
+
+    def _schedule(self):
+        return RequestSchedule([
+            UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                           after_stage=0, rounds=2),
+            UnlearnRequest(lambda p: [p.shard_clients[1][0]], framework="SE",
+                           after_stage=0, rounds=2),
+        ])
+
+    def test_batch_merges_compatible_requests(self):
+        session = FederatedSession(_tiny_sim(), store_kind="coded",
+                                   batch_requests=True)
+        report = session.run(1, schedule=self._schedule())
+        (st,) = report.stages
+        assert len(st.unlearn) == 1                 # merged: one serve
+        assert st.unlearn[0].impacted_shards == [0, 1]
+
+    def test_batched_equals_union_request(self):
+        s_bat, s_ref = _tiny_sim(), _tiny_sim()
+        session = FederatedSession(s_bat, store_kind="coded",
+                                   batch_requests=True)
+        report = session.run(1, schedule=self._schedule())
+        res_bat = report.stages[0].unlearn[0]
+        rec = train_stage(s_ref, store_kind="coded")
+        victims = [rec.plan.shard_clients[0][0], rec.plan.shard_clients[1][0]]
+        res_ref = run_unlearn(s_ref, "SE", rec, victims, rounds=2)
+        assert res_bat.cost_units == res_ref.cost_units
+        assert res_bat.impacted_shards == res_ref.impacted_shards
+        for s in res_ref.models:
+            for a, b in zip(jax.tree.leaves(res_ref.models[s]),
+                            jax.tree.leaves(res_bat.models[s])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_sequential_default_unchanged(self):
+        session = FederatedSession(_tiny_sim(), store_kind="coded")
+        report = session.run(1, schedule=self._schedule())
+        assert len(report.stages[0].unlearn) == 2   # one serve per request
+
+    def test_incompatible_options_stay_separate(self):
+        schedule = RequestSchedule([
+            UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                           after_stage=0, rounds=2),
+            UnlearnRequest(lambda p: [p.shard_clients[1][0]], framework="SE",
+                           after_stage=0, rounds=1),
+        ])
+        session = FederatedSession(_tiny_sim(), store_kind="coded",
+                                   batch_requests=True)
+        report = session.run(1, schedule=schedule)
+        assert len(report.stages[0].unlearn) == 2   # rounds differ: no merge
+
+    def test_unlearn_batch_requires_stage(self):
+        session = FederatedSession(_tiny_sim(), batch_requests=True)
+        with pytest.raises(RuntimeError, match="no completed stages"):
+            session.unlearn_batch([UnlearnRequest([0])])
+
+    def test_scenario_config_batches(self):
+        cfg = ScenarioConfig(num_clients=8, clients_per_round=8, num_shards=2,
+                             local_epochs=2, global_rounds=2,
+                             samples_per_client=30, image_size=8, test_n=50,
+                             engine="stage", batch_requests=True,
+                             schedule=RequestSchedule([
+                                 UnlearnRequest(
+                                     lambda p: [p.shard_clients[0][0]],
+                                     framework="SE", after_stage=0, rounds=1),
+                                 UnlearnRequest(
+                                     lambda p: [p.shard_clients[1][0]],
+                                     framework="SE", after_stage=0, rounds=1),
+                             ]))
+        report = run_scenario(cfg)
+        (st,) = report.stages
+        assert len(st.unlearn) == 1
+        assert st.unlearn[0].impacted_shards == [0, 1]
+
+
 # ---------------------------------------------- all frameworks, shim parity
 class TestFrameworkShimParity:
     @pytest.fixture(scope="class")
