@@ -30,6 +30,7 @@ benchmark can compare storage overhead and (modelled) communication time.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence, Tuple,
                     runtime_checkable)
@@ -231,6 +232,9 @@ class FullStore:
         self._data: Dict[Tuple[int, int], object] = {}
         self._shards: Dict[int, Dict[int, List[int]]] = {}  # rnd -> layout
         self.stats = StoreStats()
+        # ``get`` materializes lazy stacked rows in place: serialize it so
+        # interleaved serves (service worker threads) read safely
+        self._lock = threading.RLock()
 
     def put_round(self, payload: RoundPayload) -> None:
         self._shards[payload.rnd] = payload.shard_clients
@@ -244,11 +248,12 @@ class FullStore:
         pass
 
     def get(self, rnd: int, client: int):
-        p = self._data[(rnd, client)]
-        if isinstance(p, _StackedRow):
-            p = p.materialize()
-            self._data[(rnd, client)] = p
-        self.stats.comm_bytes_retrieve += tree_bytes(p)
+        with self._lock:
+            p = self._data[(rnd, client)]
+            if isinstance(p, _StackedRow):
+                p = p.materialize()
+                self._data[(rnd, client)] = p
+            self.stats.comm_bytes_retrieve += tree_bytes(p)
         return p
 
     def get_shard(self, rnd: int, shard: int,
@@ -307,6 +312,12 @@ class CodedStore:
         self._row_layout = None               # cached flat-path geometry
         self.stats = StoreStats()
         self.stats.server_bytes = 16 * scheme.num_clients  # the keys
+        # concurrent-read safety for interleaved serves: ``get_shard`` may
+        # trigger ``flush`` (mutating _slices/_pending) and always mutates
+        # stats, so the online service's worker threads reading different
+        # shards of the same store must serialize through this lock.
+        # Re-entrant because get_shard -> flush nests.
+        self._lock = threading.RLock()
 
     def put_round(self, payload: RoundPayload) -> None:
         if payload.flat is not None:
@@ -334,10 +345,11 @@ class CodedStore:
             shard_trees.append({c: client_params[c] for c in cs})
         slices, specs = coding.encode_pytrees(self.scheme, shard_trees,
                                               use_kernel=self.use_kernel)
-        self._slices[rnd] = slices
-        self._specs[rnd] = specs
-        self._layouts[rnd] = layout
-        self._account_stored(slices)
+        with self._lock:
+            self._slices[rnd] = slices
+            self._specs[rnd] = specs
+            self._layouts[rnd] = layout
+            self._account_stored(slices)
 
     def _put_flat(self, rnd: int, shard_flats: Dict[int, jnp.ndarray],
                   row_spec):
@@ -352,26 +364,29 @@ class CodedStore:
         itself is deferred and batched ``group_rounds`` rounds at a time into
         a single (S, G*P) coded matmul (see ``flush``).
         """
-        if self._row_layout is None:
-            layout, specs, lens = [], [], []
-            for s in sorted(self.shard_clients):
-                cs = list(self.shard_clients[s])
-                f = shard_flats[s]
-                assert f.shape[0] == len(cs), (s, f.shape, cs)
-                layout.append((s, cs))
-                specs.append(coding.StackedRowSpec(tuple(cs),
-                                                   int(f.shape[1]), row_spec))
-                lens.append(int(f.shape[0]) * int(f.shape[1]))
-            self._row_layout = (layout, tuple(specs), max(lens))
-        layout, specs, pmax = self._row_layout
-        rows = [shard_flats[s].reshape(-1) for s, _ in layout]
-        w = jnp.stack([r if r.shape[0] == pmax else jnp.pad(r, (0, pmax - r.shape[0]))
-                       for r in rows])
-        self._layouts[rnd] = layout
-        self._specs[rnd] = specs
-        self._pending.append((rnd, w))
-        if len(self._pending) >= self.group_rounds:
-            self.flush()
+        with self._lock:
+            if self._row_layout is None:
+                layout, specs, lens = [], [], []
+                for s in sorted(self.shard_clients):
+                    cs = list(self.shard_clients[s])
+                    f = shard_flats[s]
+                    assert f.shape[0] == len(cs), (s, f.shape, cs)
+                    layout.append((s, cs))
+                    specs.append(coding.StackedRowSpec(tuple(cs),
+                                                       int(f.shape[1]),
+                                                       row_spec))
+                    lens.append(int(f.shape[0]) * int(f.shape[1]))
+                self._row_layout = (layout, tuple(specs), max(lens))
+            layout, specs, pmax = self._row_layout
+            rows = [shard_flats[s].reshape(-1) for s, _ in layout]
+            w = jnp.stack([r if r.shape[0] == pmax
+                           else jnp.pad(r, (0, pmax - r.shape[0]))
+                           for r in rows])
+            self._layouts[rnd] = layout
+            self._specs[rnd] = specs
+            self._pending.append((rnd, w))
+            if len(self._pending) >= self.group_rounds:
+                self.flush()
 
     def put_stage_encoded(self, coded: jnp.ndarray, row_spec,
                           row_len: int) -> None:
@@ -393,25 +408,27 @@ class CodedStore:
             layout.append((s, cs))
             specs.append(coding.StackedRowSpec(tuple(cs), row_len, row_spec))
         specs = tuple(specs)
-        for g in range(int(coded.shape[0])):
-            self._slices[g] = coded[g]
-            self._layouts[g] = layout
-            self._specs[g] = specs
-            self._account_stored(coded[g])
+        with self._lock:
+            for g in range(int(coded.shape[0])):
+                self._slices[g] = coded[g]
+                self._layouts[g] = layout
+                self._specs[g] = specs
+                self._account_stored(coded[g])
 
     def flush(self):
         """Encode all deferred rounds in one batched coded matmul."""
-        if not self._pending:
-            return
-        rounds = [r for r, _ in self._pending]
-        mats = [w for _, w in self._pending]
-        self._pending = []
-        coded = coding.encode_batched(self.scheme, mats,
-                                      use_kernel=self.use_kernel,
-                                      out_dtype=self.slice_dtype)
-        for rnd, slices in zip(rounds, coded):
-            self._slices[rnd] = slices
-            self._account_stored(slices)
+        with self._lock:
+            if not self._pending:
+                return
+            rounds = [r for r, _ in self._pending]
+            mats = [w for _, w in self._pending]
+            self._pending = []
+            coded = coding.encode_batched(self.scheme, mats,
+                                          use_kernel=self.use_kernel,
+                                          out_dtype=self.slice_dtype)
+            for rnd, slices in zip(rounds, coded):
+                self._slices[rnd] = slices
+                self._account_stored(slices)
 
     def _account_stored(self, slices: jnp.ndarray):
         p = slices.shape[1]
@@ -438,9 +455,19 @@ class CodedStore:
         ``corrupt``: optional (C,P)-shaped noise to model erroneous slices —
         triggers the error-correcting decode path.
         """
-        if rnd not in self._slices:
-            self.flush()                      # materialize deferred encodes
-        slices = self._slices[rnd]
+        with self._lock:
+            if rnd not in self._slices:
+                self.flush()                  # materialize deferred encodes
+            slices = self._slices[rnd]
+            layout = self._layouts[rnd]
+            specs = self._specs[rnd]
+            self.stats.comm_bytes_retrieve += int(
+                self.scheme.num_shards * slices.shape[1]
+                * slices.dtype.itemsize)
+            self.stats.decode_flops += (2 * self.scheme.num_shards ** 2
+                                        * slices.shape[1])
+        # decode outside the lock: pure function of the slice tensor, so
+        # interleaved serves decode different shards concurrently
         c = self.scheme.num_clients
         if corrupt is not None:
             slices = slices + jnp.asarray(corrupt, slices.dtype)
@@ -450,12 +477,6 @@ class CodedStore:
             ids = list(available) if available is not None else list(range(c))
             w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)], ids,
                                       use_kernel=self.use_kernel)
-        self.stats.comm_bytes_retrieve += int(
-            self.scheme.num_shards * slices.shape[1] * slices.dtype.itemsize)
-        self.stats.decode_flops += 2 * self.scheme.num_shards ** 2 * slices.shape[1]
-        # reassemble the requested shard's {client: tree}
-        layout = self._layouts[rnd]
-        specs = self._specs[rnd]
         for idx, (s, cs) in enumerate(layout):
             if s == shard:
                 spec = specs[idx]

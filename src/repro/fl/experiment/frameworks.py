@@ -127,12 +127,24 @@ class UnlearnFramework:
     and register with ``@register_framework(name, *aliases)``."""
 
     name: str = ""
+    # shard-level strategies retrain only impacted shards and return one
+    # model per shard; federation-level ones retrain everything ({0: w})
+    shard_level: bool = False
 
     def run(self, ctx: UnlearnContext):
         """Return ``(models, cost_units)`` where ``models`` maps shard id to
         the unlearned model ({0: w} for federation-level frameworks) and
         ``cost_units`` counts client-epochs of retraining."""
         raise NotImplementedError
+
+    @classmethod
+    def impacted_shards(cls, plan, clients: Sequence[int]) -> List[int]:
+        """The shards this strategy would retrain for ``clients`` on
+        ``plan`` — what the strategy reports to the service scheduler so it
+        can merge due requests per impacted shard and place shard programs
+        on devices.  Federation-level strategies touch every shard; SE
+        overrides with the membership-based impacted set."""
+        return sorted(plan.shard_clients)
 
 
 FRAMEWORKS: Dict[str, Type[UnlearnFramework]] = {}
@@ -198,11 +210,19 @@ class ShardedEraser(UnlearnFramework):
     budget), the whole retraining pass runs as one ``calib_stage`` program —
     the impacted shards vmapped together, the G' rounds scanned — instead of
     a Python loop of G' dispatches per shard.  Ragged shard batches fall back
-    to the per-shard loop (identical math)."""
+    to the per-shard loop (identical math).
+
+    The per-shard pieces are exposed for the online service
+    (``repro.service``): ``prepare_shard_job`` builds one shard's job and
+    ``run_prepared_job`` (module-level) retrains it — optionally on an
+    explicit device — so independent shard programs can dispatch
+    asynchronously across devices."""
+
+    shard_level = True
 
     def run(self, ctx: UnlearnContext):
         models = dict(ctx.record.shard_models)
-        jobs = self._prepare(ctx)
+        jobs = self.prepare_jobs(ctx)
         if len(jobs) > 1 and self._batchable(jobs):
             out, cost = self._run_batched(ctx, jobs)
         else:
@@ -210,24 +230,33 @@ class ShardedEraser(UnlearnFramework):
         models.update(out)
         return models, cost
 
+    @classmethod
+    def impacted_shards(cls, plan, clients: Sequence[int]) -> List[int]:
+        hit = set(clients)
+        return sorted(s for s, cs in plan.shard_clients.items()
+                      if hit & set(cs))
+
     # ------------------------------------------------------------- plumbing
-    def _prepare(self, ctx: UnlearnContext):
-        """Per impacted shard: stacked retained data, the eq.-(2) prepared
-        initial model (from the store's reconstructed round-0 locals), and
-        the (G', M') stored-norm matrix."""
-        jobs = []
-        for s in ctx.impacted:
-            retained = ctx.retained(s)
-            if not retained:
-                continue
-            xs, ys = ctx.stack_client_data(retained)
-            stored0 = ctx.stored_round(s, 0)
-            w0 = unlearning.prepare_initial_model(
-                [stored0[c] for c in retained])
-            n_r = min(ctx.rounds, len(ctx.record.round_globals[s]) - 1)
-            nmat = ctx.stored_norms(lambda c, s=s: s, retained, n_r)
-            jobs.append((s, retained, xs, ys, w0, nmat, n_r))
-        return jobs
+    @staticmethod
+    def prepare_shard_job(ctx: UnlearnContext, shard: int):
+        """One impacted shard's retraining job: stacked retained data, the
+        eq.-(2) prepared initial model (from the store's reconstructed
+        round-0 locals), and the (G', M') stored-norm matrix.  ``None`` when
+        every client of the shard was requested (nothing to retrain on)."""
+        retained = ctx.retained(shard)
+        if not retained:
+            return None
+        xs, ys = ctx.stack_client_data(retained)
+        stored0 = ctx.stored_round(shard, 0)
+        w0 = unlearning.prepare_initial_model(
+            [stored0[c] for c in retained])
+        n_r = min(ctx.rounds, len(ctx.record.round_globals[shard]) - 1)
+        nmat = ctx.stored_norms(lambda c, s=shard: s, retained, n_r)
+        return (shard, retained, xs, ys, w0, nmat, n_r)
+
+    def prepare_jobs(self, ctx: UnlearnContext):
+        jobs = (self.prepare_shard_job(ctx, s) for s in ctx.impacted)
+        return [j for j in jobs if j is not None]
 
     @staticmethod
     def _batchable(jobs) -> bool:
@@ -236,12 +265,10 @@ class ShardedEraser(UnlearnFramework):
 
     def _run_sequential(self, ctx: UnlearnContext, jobs):
         models, cost = {}, 0.0
-        for s, retained, xs, ys, w, nmat, n_r in jobs:
-            # calibrated retraining, eq (3) — fused stacked rounds
-            for g in range(n_r):
-                w = ctx.calib_round(w, xs, ys, nmat[g])
-                cost += len(retained) * ctx.retrain_epochs
+        for job in jobs:
+            s, w, c = run_prepared_job(ctx, job)
             models[s] = w
+            cost += c
         return models, cost
 
     def _run_batched(self, ctx: UnlearnContext, jobs):
@@ -256,6 +283,25 @@ class ShardedEraser(UnlearnFramework):
             models[s] = jax.tree.map(lambda a, i=i: a[i], out)
             cost += n_r * len(retained) * ctx.retrain_epochs
         return models, cost
+
+
+def run_prepared_job(ctx: UnlearnContext, job, device=None):
+    """Retrain ONE prepared shard job (eq. 3, fused stacked rounds) and
+    return ``(shard, model, cost_units)``.
+
+    With ``device`` set, the job's tensors are committed there first, so the
+    G' jitted calibration rounds dispatch asynchronously *on that device* —
+    the unit of work the service's ``DevicePlacement`` spreads across
+    ``jax.devices()``.  ``device=None`` is bit-identical to the in-process
+    sequential path (it IS the sequential path)."""
+    s, retained, xs, ys, w, nmat, n_r = job
+    if device is not None:
+        xs, ys, w, nmat = jax.device_put((xs, ys, w, nmat), device)
+    cost = 0.0
+    for g in range(n_r):
+        w = ctx.calib_round(w, xs, ys, nmat[g])
+        cost += len(retained) * ctx.retrain_epochs
+    return s, w, cost
 
 
 @register_framework("FE")

@@ -54,6 +54,7 @@ class ScenarioConfig:
     num_stages: int = 1
     schedule: Optional[RequestSchedule] = None
     batch_requests: bool = False         # merge requests due after each stage
+    strict_schedule: bool = False        # raise on never-served requests
 
     def fl_config(self) -> FLConfig:
         return FLConfig(num_clients=self.num_clients,
@@ -128,7 +129,8 @@ def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:
     session = FederatedSession(sim, store_kind=cfg.store, engine=cfg.engine,
                                encode_group=cfg.encode_group,
                                slice_dtype=cfg.slice_dtype,
-                               batch_requests=cfg.batch_requests)
+                               batch_requests=cfg.batch_requests,
+                               strict_schedule=cfg.strict_schedule)
     return session, test
 
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import json
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -54,7 +55,9 @@ class UnlearnRequest:
 
     def resolve_clients(self, plan) -> List[int]:
         cs = self.clients(plan) if callable(self.clients) else self.clients
-        return [int(c) for c in cs]
+        # dedupe, order-preserving: duplicate ids in one request are a
+        # client-side retry, not a request to erase twice
+        return list(dict.fromkeys(int(c) for c in cs))
 
 
 @dataclass
@@ -145,7 +148,8 @@ class FederatedSession:
 
     def __init__(self, sim, store_kind: str = "coded", engine: str = "fused",
                  encode_group: Optional[int] = None, slice_dtype=None,
-                 rounds: Optional[int] = None, batch_requests: bool = False):
+                 rounds: Optional[int] = None, batch_requests: bool = False,
+                 strict_schedule: bool = False):
         self.sim = sim
         self.store_kind = store_kind
         self.engine = engine
@@ -153,6 +157,7 @@ class FederatedSession:
         self.slice_dtype = slice_dtype
         self.rounds = rounds
         self.batch_requests = batch_requests
+        self.strict_schedule = strict_schedule
         self.records: List[object] = []          # StageRecord per stage
         self.report = SessionReport(store_kind=store_kind)
 
@@ -188,33 +193,53 @@ class FederatedSession:
         return [i for i, rec in enumerate(self.records)
                 if hit & set(rec.plan.clients)]
 
-    def unlearn(self, request: UnlearnRequest):
-        """Serve one request: dispatch its framework on every impacted stage
-        (and only those).  Returns the list of per-stage ``UnlearnResult``."""
+    def resolve_request(self, request: UnlearnRequest):
+        """Step-wise serving API, part 1: resolve a request against the
+        completed stages.  Returns ``(clients, stage_plan)`` where
+        ``stage_plan`` maps each impacted session stage index to the subset
+        of ``clients`` that participated in it (cross-stage isolation: a
+        stage without any requested client is simply absent)."""
         if not self.records:
             raise RuntimeError("no completed stages to unlearn from")
         clients = request.resolve_clients(self.records[-1].plan)
-        results = []
+        stage_plan = {}
         for i in self._target_stages(request, clients):
-            record = self.records[i]
-            stage_clients = [c for c in clients if c in set(record.plan.clients)]
-            if not stage_clients:
-                continue                      # isolation: stage untouched
-            res = run_unlearn(self.sim, request.framework, record,
+            members = set(self.records[i].plan.clients)
+            stage_clients = [c for c in clients if c in members]
+            if stage_clients:
+                stage_plan[i] = stage_clients
+        return clients, stage_plan
+
+    def record_result(self, stage: int, res, apply: bool = False):
+        """Step-wise serving API, part 2: land one stage's ``UnlearnResult``
+        in the session report (and, under serving semantics, fold the
+        unlearned shard models back into the stage record).  Both the
+        synchronous ``unlearn`` path and the async service ledger go
+        through here."""
+        record = self.records[stage]
+        if apply:
+            if set(res.models) != set(record.shard_models):
+                raise ValueError(
+                    f"apply=True needs shard-level models; framework "
+                    f"{res.framework!r} returned keys "
+                    f"{sorted(res.models)} for shards "
+                    f"{sorted(record.shard_models)}")
+            record.shard_models = dict(res.models)
+        self.report.stages[stage].unlearn.append(res)
+        # decode/retrieve traffic lands after the training snapshot
+        self.report.stages[stage].store_stats = record.store.stats.snapshot()
+        return res
+
+    def unlearn(self, request: UnlearnRequest):
+        """Serve one request: dispatch its framework on every impacted stage
+        (and only those).  Returns the list of per-stage ``UnlearnResult``."""
+        _clients, stage_plan = self.resolve_request(request)
+        results = []
+        for i, stage_clients in stage_plan.items():
+            res = run_unlearn(self.sim, request.framework, self.records[i],
                               stage_clients,
                               rounds=request.rounds or self.rounds)
-            if request.apply:
-                if set(res.models) != set(record.shard_models):
-                    raise ValueError(
-                        f"apply=True needs shard-level models; framework "
-                        f"{request.framework!r} returned keys "
-                        f"{sorted(res.models)} for shards "
-                        f"{sorted(record.shard_models)}")
-                record.shard_models = dict(res.models)
-            self.report.stages[i].unlearn.append(res)
-            # decode/retrieve traffic lands after the training snapshot
-            self.report.stages[i].store_stats = record.store.stats.snapshot()
-            results.append(res)
+            results.append(self.record_result(i, res, apply=request.apply))
         return results
 
     def unlearn_batch(self, requests: Sequence[UnlearnRequest]):
@@ -255,7 +280,12 @@ class FederatedSession:
             schedule: Optional[RequestSchedule] = None) -> SessionReport:
         """K stages back-to-back; after stage k, serve every scheduled
         request with ``after_stage == k`` — one by one, or merged per batch
-        when the session was built with ``batch_requests=True``."""
+        when the session was built with ``batch_requests=True``.
+
+        A request whose ``after_stage`` falls outside ``[0, num_stages)``
+        can never come due and would previously vanish without a trace;
+        the run now warns about such unserved requests (or raises, when the
+        session was built with ``strict_schedule=True``)."""
         for k in range(num_stages):
             self.run_stage()
             if schedule is None:
@@ -268,4 +298,15 @@ class FederatedSession:
             else:
                 for req in due:
                     self.unlearn(req)
+        if schedule is not None:
+            missed = [r for r in schedule.requests
+                      if not 0 <= r.after_stage < num_stages]
+            if missed:
+                msg = (f"{len(missed)} scheduled unlearning request(s) were "
+                       f"never served: after_stage "
+                       f"{sorted(r.after_stage for r in missed)} outside the "
+                       f"run's [0, {num_stages}) stage range")
+                if self.strict_schedule:
+                    raise ValueError(msg)
+                warnings.warn(msg, stacklevel=2)
         return self.report

@@ -1,0 +1,31 @@
+"""Online unlearning service — event-driven request scheduling with async
+multi-device dispatch and SLA-measured serving.
+
+The batch-replay ``FederatedSession`` serves a *fixed* schedule between
+training stages; this package serves an *online stream*: seeded workload
+generators produce arrival traces on a virtual clock (``workload``),
+pluggable scheduling policies decide when and how requests coalesce
+(``policy``: ``fifo`` / ``window`` / ``sla``), a ``DevicePlacement`` spreads
+the independent shard-retraining programs across ``jax.devices()`` with
+asynchronous dispatch (``placement``), and the engine's ledger measures
+per-request latency (queue wait, batch wait, retrain wall), p50/p95/p99,
+throughput, and SLA hit rate (``engine``).
+
+    trace = poisson_trace(plan.clients, n=16, rate=8.0, seed=0)
+    service = UnlearningService(session, policy="window",
+                                policy_opts={"width": 0.5})
+    report = service.serve(trace)
+    print(report.p95, report.throughput)
+"""
+from repro.service.engine import (LedgerEntry, ServiceReport,  # noqa: F401
+                                  UnlearningService)
+from repro.service.placement import (DevicePlacement,  # noqa: F401
+                                     single_device_placement)
+from repro.service.policy import (POLICIES, BatchWindowPolicy,  # noqa: F401
+                                  FIFOPolicy, Pending, SLAPolicy,
+                                  SchedulingPolicy, make_policy,
+                                  register_policy)
+from repro.service.workload import (ServiceRequest, VirtualClock,  # noqa: F401
+                                    bursty_trace, client_sampler, load_trace,
+                                    poisson_trace, save_trace,
+                                    sequenced_trace)

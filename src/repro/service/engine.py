@@ -1,0 +1,419 @@
+"""The online unlearning service engine: event loop, async dispatch, SLA
+ledger.
+
+``UnlearningService`` turns a trained ``FederatedSession`` into a server for
+a *stream* of unlearning requests:
+
+1. **Schedule** (deterministic, virtual time): arrivals from the workload
+   trace are admitted to a queue as the discrete-event clock advances; the
+   scheduling policy (``repro.service.policy``) decides when queued requests
+   dispatch and which coalesce into one batch.  Nothing here reads the wall
+   clock, so the dispatch plan is a pure function of (trace, policy,
+   session) — reproducible run-to-run.
+2. **Dispatch** (asynchronous, measured): each batch's requests merge per
+   compatible serving options (the session's union-of-clients semantics);
+   every impacted (stage, shard) becomes an independent shard-retraining
+   job placed on a device by ``DevicePlacement`` and dispatched without
+   blocking.  ``block_until_ready`` happens only at the request-completion
+   ledger, inside the worker that ran the job.
+3. **Ledger**: per request — queue wait (virtual), batch wait (measured
+   executor delay), retrain wall (measured), end-to-end latency, SLA
+   verdict — aggregated into a ``ServiceReport`` with p50/p95/p99 latency
+   and throughput, exported via ``to_json`` into the BENCH trajectory.
+
+Serving runs in **throughput mode**: batches are dispatched back-to-back
+as fast as the placement accepts them, not paced to the virtual timeline
+(virtual seconds are not wall seconds).  On a multi-batch trace a later
+batch's measured ``batch_wait`` can therefore include capacity contention
+from earlier batches that, on the virtual timeline, would already have
+drained during its (separately charged) ``queue_wait`` — latencies and SLA
+verdicts are *conservative upper bounds*: a paced real-time server would
+see equal or lower latency, and ``sla_met=True`` here is always true
+there.
+
+The sequential baseline (``policy="fifo"`` + ``single_device_placement()``)
+takes the exact same code path as ``FederatedSession.run`` serving the same
+trace — single-victim serves are bit-identical (the service-layer test
+asserts it).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.fl.experiment.frameworks import (FRAMEWORKS, UnlearnContext,
+                                            get_framework, run_prepared_job)
+from repro.fl.experiment.session import UnlearnRequest
+from repro.fl.simulator import UnlearnResult
+from repro.service.placement import DevicePlacement
+from repro.service.policy import Pending, SchedulingPolicy, make_policy
+from repro.service.workload import ServiceRequest, VirtualClock
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LedgerEntry:
+    """One served request's latency decomposition.
+
+    ``queue_wait`` is virtual (arrival -> policy release, deterministic);
+    ``batch_wait`` and ``retrain_wall`` are measured — dispatch -> first job
+    start (waiting for a free device/worker), and first job start -> last
+    job blocked (the retraining itself).  ``latency`` =
+    ``queue_wait + batch_wait + retrain_wall`` — the end-to-end figure the
+    SLA verdict uses.
+    """
+    rid: int
+    arrival: float
+    clients: Tuple[int, ...]
+    framework: str
+    batch_id: int
+    queue_wait: float = 0.0
+    batch_wait: float = 0.0
+    retrain_wall: float = 0.0
+    latency: float = 0.0
+    n_jobs: int = 0
+    devices: List[int] = field(default_factory=list)
+    impacted: List[Tuple[int, int]] = field(default_factory=list)
+    cost_units: float = 0.0
+    deadline: Optional[float] = None
+    sla_met: Optional[bool] = None
+
+    def to_dict(self) -> dict:
+        return {
+            "rid": self.rid, "arrival_s": self.arrival,
+            "clients": list(self.clients), "framework": self.framework,
+            "batch_id": self.batch_id, "queue_wait_s": self.queue_wait,
+            "batch_wait_s": self.batch_wait,
+            "retrain_wall_s": self.retrain_wall, "latency_s": self.latency,
+            "n_jobs": self.n_jobs, "devices": list(self.devices),
+            "impacted": [list(p) for p in self.impacted],
+            "cost_units": self.cost_units, "deadline_s": self.deadline,
+            "sla_met": self.sla_met,
+        }
+
+
+@dataclass
+class ServiceReport:
+    """Per-request ledger plus the serving aggregates the paper's SLA story
+    needs: latency percentiles, throughput, batching/placement effect."""
+    entries: List[LedgerEntry] = field(default_factory=list)
+    policy: dict = field(default_factory=dict)
+    placement: dict = field(default_factory=dict)
+    serve_wall: float = 0.0
+    num_batches: int = 0
+
+    # ------------------------------------------------------------ aggregates
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.asarray([e.latency for e in self.entries], np.float64)
+
+    def percentile(self, q: float) -> float:
+        lat = self.latencies
+        return float(np.percentile(lat, q)) if lat.size else 0.0
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def throughput(self) -> float:
+        """Requests served per measured serving second."""
+        return len(self.entries) / self.serve_wall if self.serve_wall else 0.0
+
+    @property
+    def sla_hit_rate(self) -> Optional[float]:
+        verdicts = [e.sla_met for e in self.entries if e.sla_met is not None]
+        if not verdicts:
+            return None
+        return sum(verdicts) / len(verdicts)
+
+    @property
+    def total_retrain_wall(self) -> float:
+        return sum(e.retrain_wall for e in self.entries)
+
+    def to_dict(self) -> dict:
+        return {
+            "policy": self.policy,
+            "placement": self.placement,
+            "num_requests": len(self.entries),
+            "num_batches": self.num_batches,
+            "serve_wall_s": self.serve_wall,
+            "throughput_rps": self.throughput,
+            "latency_p50_s": self.p50,
+            "latency_p95_s": self.p95,
+            "latency_p99_s": self.p99,
+            "sla_hit_rate": self.sla_hit_rate,
+            "requests": [e.to_dict() for e in self.entries],
+        }
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Internal dispatch records
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Batch:
+    bid: int
+    time: float                       # virtual release time
+    pendings: List[Pending]
+
+
+@dataclass
+class _Serve:
+    """One merged request-group in flight: its per-stage job futures plus
+    everything the gather pass needs to assemble ``UnlearnResult``s and
+    ledger entries."""
+    batch: _Batch
+    requests: List[Pending]
+    framework: str
+    rounds: Optional[int]
+    apply: bool
+    clients: List[int]
+    stage_ctxs: Dict[int, UnlearnContext] = field(default_factory=dict)
+    stage_jobs: Dict[int, list] = field(default_factory=dict)  # futures
+    dispatch_off: float = 0.0          # wall offset at dispatch
+
+
+class UnlearningService:
+    """Event-driven serving of unlearning requests against a trained
+    ``FederatedSession``.
+
+    >>> service = UnlearningService(session, policy="window",
+    ...                             policy_opts={"width": 0.5})
+    >>> report = service.serve(poisson_trace(plan.clients, n=16, rate=8.0))
+    >>> print(report.p95, report.throughput)
+    """
+
+    def __init__(self, session, policy="fifo",
+                 policy_opts: Optional[dict] = None,
+                 placement: Optional[DevicePlacement] = None):
+        self.session = session
+        self.policy: SchedulingPolicy = (
+            make_policy(policy, **(policy_opts or {}))
+            if isinstance(policy, str) else policy)
+        self.placement = placement or DevicePlacement()
+
+    # ----------------------------------------------------------- scheduling
+    def _impact_of(self, req: ServiceRequest) -> frozenset:
+        """What the request's framework reports it would retrain — the
+        (stage, shard) pairs the scheduler merges and places by."""
+        fw_cls = FRAMEWORKS.get(req.framework)
+        if fw_cls is None:
+            raise ValueError(f"unknown unlearning framework "
+                             f"{req.framework!r} in request {req.rid}")
+        out = set()
+        for i, rec in enumerate(self.session.records):
+            stage_clients = [c for c in req.clients
+                             if c in set(rec.plan.clients)]
+            if not stage_clients:
+                continue
+            for s in fw_cls.impacted_shards(rec.plan, stage_clients):
+                out.add((i, s))
+        return frozenset(out)
+
+    def plan_schedule(self, trace: Sequence[ServiceRequest]) -> List[_Batch]:
+        """The deterministic half: run the discrete-event loop over the
+        trace and return the dispatch plan (who batches with whom, when).
+        Pure virtual time — no wall clock, no device work."""
+        arrivals = sorted(trace, key=lambda r: (r.t, r.rid))
+        clock = VirtualClock()
+        queue: List[Pending] = []
+        batches: List[_Batch] = []
+        i = 0
+        while i < len(arrivals) or queue:
+            candidates = []
+            if i < len(arrivals):
+                candidates.append(arrivals[i].t)
+            t_policy = self.policy.next_event(queue, clock.now)
+            if t_policy is not None:
+                candidates.append(t_policy)
+            final = not candidates
+            if candidates:
+                clock.advance_to(min(candidates))
+            while i < len(arrivals) and arrivals[i].t <= clock.now:
+                req = arrivals[i]
+                queue.append(Pending(req, impacted=self._impact_of(req)))
+                i += 1
+            for group in self.policy.release(queue, clock.now, final=final):
+                batches.append(_Batch(len(batches), clock.now, group))
+            if final and queue:
+                # a policy that neither timed out nor drained would hang the
+                # loop — force the remainder out as one final batch
+                batches.append(_Batch(len(batches), clock.now, list(queue)))
+                queue.clear()
+        return batches
+
+    # ------------------------------------------------------------- dispatch
+    def _merge_groups(self, batch: _Batch) -> List[_Serve]:
+        """Union-of-clients merge per compatible serving options — the same
+        grouping rule as ``FederatedSession.unlearn_batch``."""
+        groups: Dict[tuple, _Serve] = {}
+        for p in batch.pendings:
+            key = (p.req.framework, p.req.rounds, p.req.apply)
+            serve = groups.get(key)
+            if serve is None:
+                serve = groups[key] = _Serve(
+                    batch=batch, requests=[], framework=p.req.framework,
+                    rounds=p.req.rounds, apply=p.req.apply, clients=[])
+            serve.requests.append(p)
+            for c in p.req.clients:
+                if c not in serve.clients:
+                    serve.clients.append(c)
+        return list(groups.values())
+
+    def _job_shard(self, serve: _Serve, stage: int, shard: int,
+                   dev_idx: int, t0: float):
+        """Worker body for one shard-level retraining job: prepare from the
+        (lock-protected) store, commit to the assigned device, dispatch the
+        G' calibration rounds asynchronously, and block only on this job's
+        own outputs — the completion ledger."""
+        ctx = serve.stage_ctxs[stage]
+        fw = get_framework(serve.framework)
+        start = time.perf_counter() - t0
+        job = fw.prepare_shard_job(ctx, shard)
+        if job is None:
+            return {"models": {}, "cost": 0.0, "start": start,
+                    "done": time.perf_counter() - t0, "device": dev_idx}
+        device = self.placement.device_of(dev_idx)
+        s, w, cost = run_prepared_job(ctx, job, device=device)
+        jax.block_until_ready(w)
+        return {"models": {s: w}, "cost": cost, "start": start,
+                "done": time.perf_counter() - t0, "device": dev_idx}
+
+    def _job_federation(self, serve: _Serve, stage: int, dev_idx: int,
+                        t0: float):
+        """Worker body for a federation-level framework (FE/FR/RR): one job
+        retraining everything — still dispatched asynchronously so it
+        overlaps with other in-flight serves."""
+        ctx = serve.stage_ctxs[stage]
+        fw = get_framework(serve.framework)
+        start = time.perf_counter() - t0
+        models, cost = fw.run(ctx)
+        jax.block_until_ready(list(models.values()))
+        return {"models": models, "cost": cost, "start": start,
+                "done": time.perf_counter() - t0, "device": dev_idx}
+
+    def _dispatch(self, serves: List[_Serve], t0: float):
+        for serve in serves:
+            serve.dispatch_off = time.perf_counter() - t0
+            sim = self.session.sim
+            # resolve against completed stages (session step-wise API)
+            request = UnlearnRequest(serve.clients,
+                                     framework=serve.framework,
+                                     rounds=serve.rounds, apply=serve.apply)
+            _clients, stage_plan = self.session.resolve_request(request)
+            fw_cls = FRAMEWORKS[serve.framework]
+            rounds = (serve.rounds or self.session.rounds
+                      or sim.fl.global_rounds)
+            for i, stage_clients in stage_plan.items():
+                record = self.session.records[i]
+                ctx = UnlearnContext(sim, record, list(stage_clients), rounds)
+                serve.stage_ctxs[i] = ctx
+                futures = []
+                if fw_cls.shard_level:
+                    for shard in ctx.impacted:
+                        dev = self.placement.assign()
+                        futures.append(self.placement.submit(
+                            self._job_shard, serve, i, shard, dev, t0))
+                else:
+                    dev = self.placement.assign()
+                    futures.append(self.placement.submit(
+                        self._job_federation, serve, i, dev, t0))
+                serve.stage_jobs[i] = futures
+
+    # --------------------------------------------------------------- gather
+    def _gather(self, serves: List[_Serve], report: ServiceReport, t0: float):
+        for serve in serves:
+            outs = {i: [f.result() for f in futs]
+                    for i, futs in serve.stage_jobs.items()}
+            starts = [o["start"] for os_ in outs.values() for o in os_]
+            dones = [o["done"] for os_ in outs.values() for o in os_]
+            devices = sorted({o["device"] for os_ in outs.values()
+                              for o in os_})
+            done_off = max(dones, default=serve.dispatch_off)
+            # land per-stage UnlearnResults through the session report
+            total_cost = 0.0
+            for i, os_ in sorted(outs.items()):
+                ctx = serve.stage_ctxs[i]
+                record = self.session.records[i]
+                fw_cls = FRAMEWORKS[serve.framework]
+                if fw_cls.shard_level:
+                    models = dict(record.shard_models)
+                else:
+                    models = {}
+                cost = 0.0
+                for o in os_:
+                    models.update(o["models"])
+                    cost += o["cost"]
+                total_cost += cost
+                stage_dones = [o["done"] for o in os_]
+                res = UnlearnResult(
+                    serve.framework, models,
+                    max(stage_dones, default=serve.dispatch_off)
+                    - serve.dispatch_off,
+                    cost, getattr(record.store, "stats", None), ctx.impacted)
+                self.session.record_result(i, res, apply=serve.apply)
+            # one ledger entry per ORIGINAL request in the merged group
+            start_off = min(starts) if starts else serve.dispatch_off
+            batch_wait = start_off - serve.dispatch_off
+            retrain_wall = done_off - start_off
+            for p in serve.requests:
+                queue_wait = serve.batch.time - p.req.t
+                latency = queue_wait + batch_wait + retrain_wall
+                entry = LedgerEntry(
+                    rid=p.req.rid, arrival=p.req.t, clients=p.req.clients,
+                    framework=serve.framework, batch_id=serve.batch.bid,
+                    queue_wait=queue_wait, batch_wait=batch_wait,
+                    retrain_wall=retrain_wall, latency=latency,
+                    n_jobs=sum(len(v) for v in outs.values()),
+                    devices=devices, impacted=sorted(p.impacted),
+                    cost_units=total_cost / max(len(serve.requests), 1),
+                    deadline=p.req.deadline,
+                    sla_met=(latency <= p.req.deadline
+                             if p.req.deadline is not None else None))
+                report.entries.append(entry)
+
+    # ---------------------------------------------------------------- serve
+    def serve(self, trace: Sequence[ServiceRequest]) -> ServiceReport:
+        """Serve the whole trace: plan the dispatch schedule (virtual,
+        deterministic), dispatch every batch's shard programs across the
+        placement without blocking, then gather completions into the
+        ledger.  Returns the ``ServiceReport``."""
+        if not self.session.records:
+            raise RuntimeError("train at least one stage before serving")
+        batches = self.plan_schedule(trace)
+        self.placement.reset_assignment()
+        report = ServiceReport(policy=self.policy.describe(),
+                               placement=self.placement.describe(),
+                               num_batches=len(batches))
+        t0 = time.perf_counter()
+        all_serves: List[_Serve] = []
+        for batch in batches:
+            serves = self._merge_groups(batch)
+            self._dispatch(serves, t0)
+            all_serves.extend(serves)
+        self._gather(all_serves, report, t0)
+        report.serve_wall = time.perf_counter() - t0
+        report.placement = self.placement.describe()   # incl. job counters
+        report.entries.sort(key=lambda e: e.rid)
+        return report

@@ -1,0 +1,109 @@
+"""Device placement for asynchronously dispatched unlearning programs.
+
+``DevicePlacement`` assigns independent shard-retraining jobs to the
+available ``jax.devices()`` (on CPU, virtual devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and dispatches them
+without blocking: each job's inputs are ``jax.device_put`` onto its device,
+the jitted calibration rounds are enqueued asynchronously, and
+``block_until_ready`` happens only at the request-completion ledger.
+
+One practical wrinkle this module owns: JAX's *dispatch* is asynchronous,
+but the XLA **CPU** client serializes *execution* across virtual host
+devices when everything is enqueued from one Python thread (measured on
+this container: 4 concurrent scan-heavy programs take 4.1x one program's
+wall).  Driving each device from its own worker thread recovers the
+overlap (bounded by physical cores), so the placement runs a small thread
+pool — ``max_workers = min(num_devices, os.cpu_count())`` by default — and
+routes each job to the executor with its inputs committed to the job's
+device.  On real multi-device backends (TPU/GPU) the same structure holds;
+the threads then merely hide per-device dispatch latency.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+
+class DevicePlacement:
+    """Round-robin shard-group -> device assignment plus an async dispatch
+    pool.
+
+    ``devices`` defaults to every visible JAX device.  ``max_workers``
+    bounds how many jobs execute concurrently (default: one per device,
+    capped at the host's core count — more workers than cores just thrash
+    the CPU client's shared pool).
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None,
+                 max_workers: Optional[int] = None):
+        self.devices: List = list(devices) if devices else list(jax.devices())
+        if not self.devices:
+            raise ValueError("DevicePlacement needs at least one device")
+        if max_workers is None:
+            max_workers = min(len(self.devices), os.cpu_count() or 1)
+        self.max_workers = max(int(max_workers), 1)
+        self._rr = 0
+        self._lock = threading.Lock()
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._submitted = 0
+
+    # ------------------------------------------------------------ assignment
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def reset_assignment(self) -> None:
+        """Restart the round-robin cursor — the engine calls this at the top
+        of every ``serve`` so device assignment is a deterministic function
+        of the dispatch plan (and a warmup serve touches exactly the devices
+        the measured serve will)."""
+        with self._lock:
+            self._rr = 0
+
+    def assign(self) -> int:
+        """Next device index for a job — round-robin, reset per serve, so
+        assignment is a deterministic function of the dispatch plan.
+        Returns the *index* (report-friendly) — use ``device_of`` for the
+        device object."""
+        with self._lock:
+            idx = self._rr % len(self.devices)
+            self._rr += 1
+            return idx
+
+    def device_of(self, index: int):
+        return self.devices[index % len(self.devices)]
+
+    # -------------------------------------------------------------- dispatch
+    def submit(self, fn: Callable, *args, **kw) -> Future:
+        """Run ``fn(*args, **kw)`` on the worker pool.  The callable is
+        expected to ``put`` its inputs on its assigned device and only
+        block on its own outputs (the ledger's completion point)."""
+        if self._pool is None:
+            with self._lock:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self.max_workers,
+                        thread_name_prefix="unlearn-serve")
+        self._submitted += 1
+        return self._pool.submit(fn, *args, **kw)
+
+    def shutdown(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def describe(self) -> dict:
+        return {"devices": [str(d) for d in self.devices],
+                "num_devices": self.num_devices,
+                "max_workers": self.max_workers,
+                "jobs_submitted": self._submitted}
+
+
+def single_device_placement() -> DevicePlacement:
+    """The sequential baseline: one device, one worker — jobs execute in
+    submission order, bit-identical to the synchronous session path."""
+    return DevicePlacement(devices=jax.devices()[:1], max_workers=1)

@@ -1,0 +1,80 @@
+"""Child process for the multi-device service test: forced to 4 virtual CPU
+devices via XLA_FLAGS (must be set before jax import — hence the subprocess),
+it trains one tiny stage, serves the same 4-request single-victim trace with
+the sequential FIFO/1-device baseline and the async window/4-device
+placement, checks the per-shard models agree, and prints one JSON line the
+parent test asserts on."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import FLConfig, OptimizerConfig, get_config  # noqa: E402
+from repro.core.sharding import even_requests  # noqa: E402
+from repro.data import client_datasets_images, make_image_data  # noqa: E402
+from repro.fl import FLSimulator  # noqa: E402
+from repro.fl.experiment import FederatedSession  # noqa: E402
+from repro.service import (DevicePlacement, UnlearningService,  # noqa: E402
+                           sequenced_trace, single_device_placement)
+
+
+def main():
+    fl = FLConfig(num_clients=12, clients_per_round=8, num_shards=4,
+                  local_epochs=2, global_rounds=2, retrain_ratio=2.0)
+    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=8,
+                              d_model=16, cnn_channels=(4, 4))
+    data = make_image_data(fl.num_clients * 30, image_size=8, seed=0)
+    clients = client_datasets_images(data, fl.num_clients, iid=True)
+    sim = FLSimulator(cfg, fl, clients, task="image",
+                      opt_cfg=OptimizerConfig(name="sgdm", lr=0.05,
+                                              grad_clip=0.0),
+                      local_batch=10, seed=0)
+    session = FederatedSession(sim, store_kind="coded")
+    record = session.run_stage()
+    # 4 single-victim requests hitting 4 distinct shards
+    victims = even_requests(record.plan, 4)
+    trace = sequenced_trace(victims, spacing=0.0, rounds=2)
+
+    seq = UnlearningService(session, policy="fifo",
+                            placement=single_device_placement())
+    rep_seq = seq.serve(trace)
+    qsync = UnlearningService(session, policy="window",
+                              policy_opts={"width": 1.0},
+                              placement=DevicePlacement())
+    rep_async = qsync.serve(trace)
+
+    # victims hit distinct shards, so the async merged serve retrains each
+    # shard with exactly its own victim removed — per-shard models must
+    # match the sequential single-request serves
+    results = [u for st in session.report.stages for u in st.unlearn]
+    seq_results, async_result = results[:4], results[4]
+    max_err = 0.0
+    for r in seq_results:
+        (s,) = r.impacted_shards
+        for a, b in zip(jax.tree.leaves(r.models[s]),
+                        jax.tree.leaves(async_result.models[s])):
+            max_err = max(max_err, float(np.max(np.abs(
+                np.asarray(a, np.float64) - np.asarray(b, np.float64)))))
+
+    print(json.dumps({
+        "num_devices": len(jax.devices()),
+        "devices_used": sorted({d for e in rep_async.entries
+                                for d in e.devices}),
+        "async_batches": rep_async.num_batches,
+        "async_jobs": max(e.n_jobs for e in rep_async.entries),
+        "seq_wall_s": rep_seq.serve_wall,
+        "async_wall_s": rep_async.serve_wall,
+        "max_abs_err": max_err,
+        "impacted": sorted(async_result.impacted_shards),
+    }))
+
+
+if __name__ == "__main__":
+    main()

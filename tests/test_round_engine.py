@@ -371,7 +371,7 @@ class TestBatchedCalibration:
         victims = [rec.plan.shard_clients[0][0], rec.plan.shard_clients[1][0]]
         fw = ShardedEraser()
         ctx = UnlearnContext(sim, rec, victims, FL_TINY.global_rounds)
-        jobs = fw._prepare(ctx)
+        jobs = fw.prepare_jobs(ctx)
         assert len(jobs) == 2 and fw._batchable(jobs)
         m_bat, c_bat = fw._run_batched(ctx, jobs)
         m_seq, c_seq = fw._run_sequential(ctx, jobs)
@@ -392,7 +392,7 @@ class TestBatchedCalibration:
         victims = rec.plan.shard_clients[0][:2] + [rec.plan.shard_clients[1][0]]
         fw = ShardedEraser()
         ctx = UnlearnContext(sim, rec, list(victims), 2)
-        jobs = fw._prepare(ctx)
+        jobs = fw.prepare_jobs(ctx)
         assert len(jobs) == 2 and not fw._batchable(jobs)
         res = run_unlearn(sim, "SE", rec, list(victims), rounds=2)
         assert res.impacted_shards == [0, 1]

@@ -1,0 +1,285 @@
+"""Service-layer tests: seeded workload generators (reproducible
+run-to-run), scheduling-policy semantics (pure virtual-time logic), the
+serving engine's ledger, and the acceptance anchors — FIFO on a 1-device
+placement is bit-identical to the sequential ``FederatedSession.run`` on the
+same request trace, and a 4-virtual-device subprocess run spreads one
+batch's shard programs across all devices with per-shard models matching
+the sequential serves."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, OptimizerConfig, get_config
+from repro.data import client_datasets_images, make_image_data
+from repro.fl import FLSimulator
+from repro.fl.experiment import (FederatedSession, RequestSchedule,
+                                 UnlearnRequest)
+from repro.service import (POLICIES, BatchWindowPolicy, FIFOPolicy, Pending,
+                           SLAPolicy, ServiceRequest, UnlearningService,
+                           VirtualClock, bursty_trace, client_sampler,
+                           load_trace, make_policy, poisson_trace, save_trace,
+                           sequenced_trace, single_device_placement)
+
+FL_TINY = FLConfig(num_clients=10, clients_per_round=8, num_shards=2,
+                   local_epochs=2, global_rounds=3, retrain_ratio=2.0)
+
+
+def _tiny_sim(seed=0):
+    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=8,
+                              d_model=16, cnn_channels=(4, 4))
+    data = make_image_data(FL_TINY.num_clients * 30, image_size=8, seed=0)
+    clients = client_datasets_images(data, FL_TINY.num_clients, iid=True)
+    return FLSimulator(cfg, FL_TINY, clients, task="image",
+                       opt_cfg=OptimizerConfig(name="sgdm", lr=0.05,
+                                               grad_clip=0.0),
+                       local_batch=10, seed=seed)
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _req(rid, t, clients=(0,), deadline=None, framework="SE"):
+    return ServiceRequest(t=t, clients=tuple(clients), framework=framework,
+                          deadline=deadline, rid=rid)
+
+
+def _pend(rid, t, impacted):
+    return Pending(_req(rid, t), impacted=frozenset(impacted))
+
+
+# ------------------------------------------------------------------ workload
+class TestWorkload:
+    def test_poisson_reproducible(self):
+        a = poisson_trace(range(10), n=8, rate=4.0, seed=3, skew=1.0)
+        b = poisson_trace(range(10), n=8, rate=4.0, seed=3, skew=1.0)
+        assert a == b
+        c = poisson_trace(range(10), n=8, rate=4.0, seed=4, skew=1.0)
+        assert a != c
+        ts = [r.t for r in a]
+        assert ts == sorted(ts) and ts[0] > 0
+        assert [r.rid for r in a] == list(range(8))
+
+    def test_bursty_reproducible_and_bursty(self):
+        a = bursty_trace(range(10), n=12, burst_rate=2.0, mean_burst=4.0,
+                         seed=7)
+        b = bursty_trace(range(10), n=12, burst_rate=2.0, mean_burst=4.0,
+                         seed=7)
+        assert a == b
+        times = [r.t for r in a]
+        assert len(set(times)) < len(times)        # some burst shares a t
+
+    def test_hot_client_skew_concentrates(self):
+        flat = poisson_trace(range(20), n=60, rate=1.0, seed=0, skew=0.0)
+        hot = poisson_trace(range(20), n=60, rate=1.0, seed=0, skew=3.0)
+
+        def top_share(trace):
+            counts = {}
+            for r in trace:
+                counts[r.clients[0]] = counts.get(r.clients[0], 0) + 1
+            return max(counts.values()) / len(trace)
+        assert top_share(hot) > top_share(flat)
+
+    def test_sampler_without_replacement_exhausts(self):
+        sample = client_sampler([1, 2, 3], seed=0, replace=False)
+        got = {sample(1)[0] for _ in range(3)}
+        assert got == {1, 2, 3}
+        with pytest.raises(ValueError, match="exhausted"):
+            sample(1)
+
+    def test_sequenced_trace_scalars_and_groups(self):
+        tr = sequenced_trace([3, (4, 5)], spacing=0.5, rounds=2)
+        assert tr[0].clients == (3,) and tr[1].clients == (4, 5)
+        assert (tr[0].t, tr[1].t) == (0.0, 0.5)
+        assert all(r.rounds == 2 for r in tr)
+
+    def test_trace_file_roundtrip(self, tmp_path):
+        trace = poisson_trace(range(6), n=5, rate=2.0, seed=1, deadline=3.0)
+        path = str(tmp_path / "trace.json")
+        save_trace(path, trace)
+        assert load_trace(path) == trace
+
+    def test_virtual_clock_is_monotone(self):
+        clk = VirtualClock()
+        assert clk.advance_to(2.0) == 2.0
+        assert clk.advance_to(1.0) == 2.0          # no time travel
+        assert clk.advance(0.5) == 2.5
+        assert clk.advance(-1.0) == 2.5
+
+
+# ------------------------------------------------------------------ policies
+class TestPolicies:
+    def test_registry(self):
+        assert {"fifo", "window", "sla"} <= set(POLICIES)
+        assert isinstance(make_policy("fifo"), FIFOPolicy)
+        with pytest.raises(ValueError, match="unknown scheduling policy"):
+            make_policy("nope")
+
+    def test_fifo_releases_singletons_in_order(self):
+        q = [_pend(1, 0.2, {(0, 1)}), _pend(0, 0.1, {(0, 0)})]
+        batches = FIFOPolicy().release(q, now=0.3)
+        assert [[p.req.rid for p in b] for b in batches] == [[0], [1]]
+        assert q == []
+
+    def test_window_coalesces_per_window(self):
+        pol = BatchWindowPolicy(width=1.0)
+        q = [_pend(0, 0.1, set()), _pend(1, 0.9, set()), _pend(2, 1.2, set())]
+        assert pol.next_event(q, now=0.0) == 1.0
+        batches = pol.release(q, now=1.0)
+        assert [[p.req.rid for p in b] for b in batches] == [[0, 1]]
+        assert [p.req.rid for p in q] == [2]       # window 1 still open
+        drained = pol.release(q, now=1.5, final=True)
+        assert [[p.req.rid for p in b] for b in drained] == [[2]]
+        assert q == []                             # final drains
+
+    def test_window_rejects_bad_width(self):
+        with pytest.raises(ValueError, match="positive"):
+            BatchWindowPolicy(width=0.0)
+
+    def test_sla_merges_due_with_shard_overlap(self):
+        pol = SLAPolicy(default_deadline=1.0, max_hold=float("inf"))
+        q = [_pend(0, 0.0, {(0, 0)}),              # due at t=1.0
+             _pend(1, 0.8, {(0, 0), (0, 1)}),      # overlaps shard 0
+             _pend(2, 0.9, {(0, 2)})]              # disjoint — stays queued
+        assert pol.next_event(q, now=0.0) == 1.0
+        batches = pol.release(q, now=1.0)
+        assert [[p.req.rid for p in b] for b in batches] == [[0, 1]]
+        assert [p.req.rid for p in q] == [2]
+
+    def test_sla_transitive_overlap_closure(self):
+        pol = SLAPolicy(default_deadline=1.0)
+        q = [_pend(0, 0.0, {(0, 0)}),
+             _pend(1, 0.5, {(0, 0), (0, 1)}),
+             _pend(2, 0.6, {(0, 1), (0, 2)})]      # joins via request 1
+        (batch,) = pol.release(q, now=1.0)
+        assert [p.req.rid for p in batch] == [0, 1, 2]
+
+    def test_sla_respects_request_deadline(self):
+        pol = SLAPolicy(default_deadline=100.0, est_serve=0.5)
+        q = [Pending(_req(0, 0.0, deadline=2.0), frozenset({(0, 0)}))]
+        assert pol.next_event(q, now=0.0) == pytest.approx(1.5)
+
+    def test_sla_default_hold_is_capped_below_deadline(self):
+        """With no serving-time estimate the default max_hold (half the
+        deadline budget) keeps the policy from holding a request right up
+        to its own deadline — which would guarantee an SLA miss."""
+        pol = SLAPolicy(default_deadline=10.0)
+        q = [_pend(0, 2.0, {(0, 0)})]
+        assert pol.next_event(q, now=2.0) == pytest.approx(7.0)
+
+
+# ------------------------------------------------------------------- serving
+class TestServiceServing:
+    @pytest.fixture(scope="class")
+    def sessions(self):
+        """Two identically-seeded trained sessions + their shared victims:
+        one serves through ``FederatedSession.run`` (the reference), one
+        through the service."""
+        sim_a, sim_b = _tiny_sim(), _tiny_sim()
+        sess_a = FederatedSession(sim_a, store_kind="coded")
+        sess_b = FederatedSession(sim_b, store_kind="coded")
+        rec = sess_b.run_stage()
+        victims = [rec.plan.shard_clients[0][0], rec.plan.shard_clients[1][0]]
+        schedule = RequestSchedule([
+            UnlearnRequest([v], framework="SE", after_stage=0, rounds=2)
+            for v in victims])
+        sess_a.run(1, schedule=schedule)
+        return sess_a, sess_b, victims
+
+    def test_fifo_one_device_bit_identical_to_session_run(self, sessions):
+        sess_a, sess_b, victims = sessions
+        trace = sequenced_trace(victims, spacing=0.1, rounds=2)
+        service = UnlearningService(sess_b, policy="fifo",
+                                    placement=single_device_placement())
+        report = service.serve(trace)
+        assert len(report.entries) == len(trace)
+        ref = [u for st in sess_a.report.stages for u in st.unlearn]
+        got = [u for st in sess_b.report.stages for u in st.unlearn]
+        assert len(ref) == len(got) == len(victims)
+        for ra, rb in zip(ref, got):
+            assert ra.impacted_shards == rb.impacted_shards
+            assert ra.cost_units == rb.cost_units
+            for s in ra.models:
+                _trees_equal(ra.models[s], rb.models[s])
+
+    def test_ledger_fields_and_json(self, sessions):
+        _, sess_b, victims = sessions
+        trace = sequenced_trace(victims, spacing=0.05, rounds=1,
+                                deadline=120.0)
+        report = UnlearningService(
+            sess_b, policy="window", policy_opts={"width": 1.0},
+            placement=single_device_placement()).serve(trace)
+        assert report.num_batches == 1             # coalesced in one window
+        d = json.loads(report.to_json())
+        assert d["num_requests"] == len(victims)
+        assert d["throughput_rps"] > 0
+        assert d["latency_p50_s"] <= d["latency_p95_s"] <= d["latency_p99_s"]
+        for e in report.entries:
+            assert e.queue_wait >= 0 and e.batch_wait >= 0
+            assert e.retrain_wall > 0
+            assert e.latency == pytest.approx(
+                e.queue_wait + e.batch_wait + e.retrain_wall)
+            assert e.sla_met is True
+        assert report.sla_hit_rate == 1.0
+
+    def test_sla_deadline_missed_is_marked(self, sessions):
+        _, sess_b, victims = sessions
+        trace = sequenced_trace(victims[:1], rounds=1, deadline=1e-9)
+        report = UnlearningService(
+            sess_b, placement=single_device_placement()).serve(trace)
+        assert report.entries[0].sla_met is False
+        assert report.sla_hit_rate == 0.0
+
+    def test_requests_outside_stage_serve_empty(self, sessions):
+        _, sess_b, _ = sessions
+        absent = [c for c in range(FL_TINY.num_clients)
+                  if c not in set(sess_b.records[0].plan.clients)]
+        trace = sequenced_trace(absent[:1], rounds=1)
+        report = UnlearningService(
+            sess_b, placement=single_device_placement()).serve(trace)
+        (entry,) = report.entries
+        assert entry.n_jobs == 0 and entry.retrain_wall == 0.0
+
+    def test_unknown_framework_raises(self, sessions):
+        _, sess_b, victims = sessions
+        trace = sequenced_trace(victims[:1], framework="NOPE")
+        with pytest.raises(ValueError, match="unknown unlearning framework"):
+            UnlearningService(sess_b).serve(trace)
+
+    def test_serve_requires_trained_stage(self):
+        session = FederatedSession(_tiny_sim())
+        with pytest.raises(RuntimeError, match="train at least one stage"):
+            UnlearningService(session).serve(sequenced_trace([0]))
+
+
+# --------------------------------------------------- async multi-device run
+class TestAsyncMultiDevice:
+    def test_four_virtual_devices_serve_concurrently(self):
+        """Acceptance anchor: on 4 virtual CPU devices, one async batch of 4
+        single-shard requests lands one shard program per device, and every
+        per-shard model matches the sequential FIFO serves.  Subprocess
+        because XLA_FLAGS must be set before jax initializes."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4")
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ["src", env.get("PYTHONPATH", "")] if p)
+        child = os.path.join(os.path.dirname(__file__),
+                             "_service_async_child.py")
+        proc = subprocess.run([sys.executable, child], env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(child))),
+                              capture_output=True, text=True, timeout=560)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["num_devices"] == 4
+        assert out["devices_used"] == [0, 1, 2, 3]
+        assert out["async_batches"] == 1           # one merged window batch
+        assert out["async_jobs"] == 4              # one program per shard
+        assert out["impacted"] == [0, 1, 2, 3]
+        assert out["max_abs_err"] < 1e-5

@@ -370,6 +370,85 @@ class TestBatchedRequests:
         assert st.unlearn[0].impacted_shards == [0, 1]
 
 
+# ------------------------------------------------- request edge cases
+class TestRequestEdgeCases:
+    @pytest.fixture(scope="class")
+    def session(self):
+        s = FederatedSession(_tiny_sim(), store_kind="coded", rounds=2)
+        s.run_stage()
+        return s
+
+    def test_duplicate_client_ids_dedupe(self, session):
+        """Duplicate ids in one request are a retry, not a double-erasure:
+        resolution dedupes (order-preserving) and the served models equal
+        the unique request's bit-for-bit."""
+        victim = session.records[0].plan.shard_clients[0][0]
+        dup = UnlearnRequest([victim, victim, victim], framework="SE")
+        assert dup.resolve_clients(session.records[0].plan) == [victim]
+        res_dup = session.unlearn(dup)[0]
+        res_one = session.unlearn(UnlearnRequest([victim], framework="SE"))[0]
+        assert res_dup.cost_units == res_one.cost_units
+        assert res_dup.impacted_shards == res_one.impacted_shards
+        for s in res_one.models:
+            _trees_equal(res_dup.models[s], res_one.models[s])
+
+    def test_callable_resolving_empty_serves_nothing(self, session):
+        before = sum(len(st.unlearn) for st in session.report.stages)
+        results = session.unlearn(UnlearnRequest(lambda plan: [],
+                                                 framework="SE"))
+        assert results == []
+        after = sum(len(st.unlearn) for st in session.report.stages)
+        assert after == before                     # report untouched
+
+    def test_apply_with_batched_serving(self):
+        """apply=True survives the batch merge: the union-serve's models
+        land in the stage record for every impacted shard."""
+        session = FederatedSession(_tiny_sim(), store_kind="coded",
+                                   batch_requests=True, rounds=2)
+        rec = session.run_stage()
+        before = {s: rec.shard_models[s] for s in rec.shard_models}
+        schedule = RequestSchedule([
+            UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                           after_stage=0, apply=True),
+            UnlearnRequest(lambda p: [p.shard_clients[1][0]], framework="SE",
+                           after_stage=0, apply=True),
+        ])
+        due = schedule.due(0)
+        (res,) = session.unlearn_batch(due)
+        assert res.impacted_shards == [0, 1]
+        for s in (0, 1):
+            assert rec.shard_models[s] is not before[s]
+            _trees_equal(rec.shard_models[s], res.models[s])
+
+
+# ------------------------------------------------- unserved-request loss
+class TestUnservedRequests:
+    def _session(self, **kw):
+        return FederatedSession(_tiny_sim(), store_kind="uncoded", rounds=1,
+                                **kw)
+
+    def test_unserveable_request_warns(self):
+        schedule = RequestSchedule([UnlearnRequest([0], after_stage=5,
+                                                   rounds=1)])
+        with pytest.warns(UserWarning, match="never served"):
+            self._session().run(1, schedule=schedule)
+
+    def test_strict_schedule_raises(self):
+        schedule = RequestSchedule([UnlearnRequest([0], after_stage=5,
+                                                   rounds=1)])
+        with pytest.raises(ValueError, match="never served"):
+            self._session(strict_schedule=True).run(1, schedule=schedule)
+
+    def test_served_schedule_does_not_warn(self, recwarn):
+        session = self._session(strict_schedule=True)
+        schedule = RequestSchedule([UnlearnRequest(
+            lambda p: [p.shard_clients[0][0]], after_stage=0, rounds=1)])
+        report = session.run(1, schedule=schedule)
+        assert sum(len(st.unlearn) for st in report.stages) == 1
+        assert not [w for w in recwarn.list
+                    if "never served" in str(w.message)]
+
+
 # ---------------------------------------------- all frameworks, shim parity
 class TestFrameworkShimParity:
     @pytest.fixture(scope="class")
