@@ -3,6 +3,10 @@ maps onto ``repro.fl.experiment.ScenarioConfig`` (one switch (--full)
 stepping toward the paper's full 100-client / G=30 / L=10 setting), and the
 simulator/session builders delegate to ``repro.fl.experiment.scenario``.
 
+``Scale``'s defaults are DERIVED from the ``ScenarioConfig`` dataclass (and
+``Scale.full()`` from ``ScenarioConfig.paper_full()``), so a new scenario
+field can never silently drift between the two.
+
 Emits ``name,us_per_call,derived`` CSV rows (harness contract).  Suites can
 additionally ``collect_report(name, obj)`` to contribute machine-readable
 session/unlearn trajectories that ``benchmarks/run.py --json-dir`` writes to
@@ -33,61 +37,72 @@ def collect_report(name: str, report) -> None:
     REPORTS[name] = report.to_dict() if hasattr(report, "to_dict") else report
 
 
-@dataclasses.dataclass
-class Scale:
-    num_clients: int = 20
-    clients_per_round: int = 12
-    num_shards: int = 4
-    local_epochs: int = 4
-    global_rounds: int = 6
-    samples_per_client: int = 80
-    image_size: int = 14
-    seq_len: int = 48
-    test_n: int = 400
-
-    @classmethod
-    def full(cls):
-        return cls(num_clients=100, clients_per_round=20, num_shards=4,
-                   local_epochs=10, global_rounds=30, samples_per_client=100,
-                   image_size=28, seq_len=64, test_n=1000)
+_SCENARIO_DEFAULTS = {f.name: f.default
+                      for f in dataclasses.fields(ScenarioConfig)}
+_SCALE_FIELDS = ("num_clients", "clients_per_round", "num_shards",
+                 "local_epochs", "global_rounds", "samples_per_client",
+                 "image_size", "seq_len", "test_n")
 
 
-def scenario_config(sc: Scale, task: str = "image", iid: bool = True,
-                    seed: int = 0, **overrides) -> ScenarioConfig:
+def _scale_full(cls):
+    pf = ScenarioConfig.paper_full()
+    return cls(**{name: getattr(pf, name) for name in _SCALE_FIELDS})
+
+
+Scale = dataclasses.make_dataclass(
+    "Scale",
+    [(name, int, dataclasses.field(default=_SCENARIO_DEFAULTS[name]))
+     for name in _SCALE_FIELDS],
+    namespace={"full": classmethod(_scale_full)})
+Scale.__doc__ = ("Benchmark scale knobs — defaults derived from "
+                 "``ScenarioConfig``; ``Scale.full()`` is the paper's full "
+                 "setting (``ScenarioConfig.paper_full``).")
+
+
+def scenario_config(sc, task: str = "classification",
+                    partitioner: str = "iid", seed: int = 0,
+                    **overrides) -> ScenarioConfig:
     """Map a benchmark Scale to an experiment ScenarioConfig."""
-    return ScenarioConfig(task=task, iid=iid, seed=seed,
-                          num_clients=sc.num_clients,
-                          clients_per_round=sc.clients_per_round,
-                          num_shards=sc.num_shards,
-                          local_epochs=sc.local_epochs,
-                          global_rounds=sc.global_rounds,
-                          retrain_ratio=2.0,
-                          samples_per_client=sc.samples_per_client,
-                          image_size=sc.image_size, seq_len=sc.seq_len,
-                          test_n=sc.test_n, **overrides)
+    return ScenarioConfig(task=task, partitioner=partitioner, seed=seed,
+                          **{name: getattr(sc, name)
+                             for name in _SCALE_FIELDS},
+                          **overrides)
 
 
-def build_image_sim(sc: Scale, iid: bool, seed: int = 0,
-                    store: str = "coded"):
+def _partitioner(iid: bool, task: str) -> str:
+    """The paper's two data distributions, by registry name."""
+    if iid:
+        return "iid"
+    return "primary-class" if task == "classification" else "buckets"
+
+
+def build_image_sim(sc, iid: bool, seed: int = 0, store: str = "coded"):
     return _scenario.build_simulator(
-        scenario_config(sc, task="image", iid=iid, seed=seed, store=store))
+        scenario_config(sc, task="classification",
+                        partitioner=_partitioner(iid, "classification"),
+                        seed=seed, store=store))
 
 
-def build_lm_sim(sc: Scale, iid: bool, seed: int = 0):
+def build_lm_sim(sc, iid: bool, seed: int = 0):
     return _scenario.build_simulator(
-        scenario_config(sc, task="lm", iid=iid, seed=seed))
+        scenario_config(sc, task="generation",
+                        partitioner=_partitioner(iid, "generation"),
+                        seed=seed))
 
 
-def build_image_session(sc: Scale, iid: bool, seed: int = 0,
-                        store: str = "coded", **overrides):
+def build_image_session(sc, iid: bool, seed: int = 0, store: str = "coded",
+                        **overrides):
     return _scenario.build_session(
-        scenario_config(sc, task="image", iid=iid, seed=seed, store=store,
-                        **overrides))
+        scenario_config(sc, task="classification",
+                        partitioner=_partitioner(iid, "classification"),
+                        seed=seed, store=store, **overrides))
 
 
-def build_lm_session(sc: Scale, iid: bool, seed: int = 0):
+def build_lm_session(sc, iid: bool, seed: int = 0):
     return _scenario.build_session(
-        scenario_config(sc, task="lm", iid=iid, seed=seed))
+        scenario_config(sc, task="generation",
+                        partitioner=_partitioner(iid, "generation"),
+                        seed=seed))
 
 
 def timed(fn, *args, **kw):

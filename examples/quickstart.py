@@ -15,7 +15,8 @@ from repro.fl.mia import mia_f1
 
 
 def main():
-    cfg = ScenarioConfig(task="image", num_clients=12, clients_per_round=8,
+    cfg = ScenarioConfig(task="classification", num_clients=12,
+                         clients_per_round=8,
                          num_shards=2, local_epochs=4, global_rounds=5,
                          samples_per_client=100, image_size=14, test_n=400,
                          store="coded")
@@ -43,7 +44,7 @@ def main():
     members = [c for c in record.plan.clients if c != victim][:4]
     mx = np.concatenate([sim.client_data[c][0][:40] for c in members])
     my = np.concatenate([sim.client_data[c][1][:40] for c in members])
-    f1 = mia_f1(sim._pf, res.models, sim._make_batch, "image",
+    f1 = mia_f1(sim._pf, res.models, sim._make_batch, sim.task,
                 (mx, my), (test_x, test_y), sim.client_data[victim])
     print("== membership-inference attack on the forgotten client ==")
     print(f"   attack F1 = {f1:.3f} (lower = better forgotten)")

@@ -24,7 +24,8 @@ def main():
     ap.add_argument("--deadline", type=float, default=20.0)
     args = ap.parse_args()
 
-    cfg = ScenarioConfig(task="image", num_clients=16, clients_per_round=12,
+    cfg = ScenarioConfig(task="classification", num_clients=16,
+                         clients_per_round=12,
                          num_shards=4, local_epochs=3, global_rounds=4,
                          samples_per_client=60, image_size=12, test_n=100,
                          store="coded")

@@ -65,6 +65,7 @@ class ModelConfig:
     ssm_conv_width: int = 4        # mamba conv1d width
     ssm_expand: int = 2            # mamba d_inner = expand * d_model
     rwkv_head_dim: int = 64
+    rwkv_impl: str = "chunked"     # chunked (XLA) | pallas (fused wkv kernel)
 
     # --- norm / misc ---
     norm_type: str = "rmsnorm"     # rmsnorm | layernorm | nonparametric

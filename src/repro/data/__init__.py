@@ -1,4 +1,6 @@
 from repro.data.synthetic import (ImageData, batch_iterator, lm_examples,  # noqa: F401
                                   make_char_data, make_image_data)
-from repro.data.federated import (client_datasets_images,  # noqa: F401
-                                  client_datasets_lm)
+from repro.data.federated import (PARTITIONERS, client_datasets_images,  # noqa: F401
+                                  client_datasets_lm, get_partitioner,
+                                  partition_dirichlet, partition_iid,
+                                  partition_zipf, register_partitioner)

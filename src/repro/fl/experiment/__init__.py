@@ -1,12 +1,19 @@
 """Pluggable experiment-orchestration layer for federated unlearning.
 
-Three registries/drivers make new scenarios drop-in plugins instead of
+Six registries/drivers make new scenarios drop-in plugins instead of
 simulator surgery:
 
 * ``STORES`` (``repro.checkpoint.store``) — parameter stores behind one
   ``put_round(RoundPayload)`` protocol (``full`` / ``uncoded`` / ``coded``).
 * ``FRAMEWORKS`` — unlearning strategies (``SE`` / ``FE`` / ``FR`` / ``RR``)
   as ``@register_framework`` classes receiving an ``UnlearnContext``.
+* ``TASKS`` (``repro.fl.tasks``) — learning tasks owning data synthesis,
+  batching, and eval metrics (``classification`` / ``generation``).
+* ``FAMILIES`` (``repro.fl.families``) — model-family adapters (``cnn`` /
+  ``transformer`` / ``mamba`` / ``rwkv6`` / ``moe``) building CPU-trainable
+  ``ModelConfig``s and declaring their Pallas kernel ops.
+* ``PARTITIONERS`` (``repro.data.federated``) — client partitioners (``iid``
+  / ``primary-class`` / ``buckets`` / ``dirichlet`` / ``zipf``).
 * ``FederatedSession`` — the multi-stage driver serving a scheduled stream
   of unlearning requests across isolated stages, with ``run_scenario``
   turning one ``ScenarioConfig`` into a ``SessionReport``.
@@ -14,10 +21,16 @@ simulator surgery:
 from repro.checkpoint.store import (ParameterStore, RoundPayload,  # noqa: F401
                                     STORES, StoreStats, make_store,
                                     register_store)
+from repro.data.federated import (PARTITIONERS,  # noqa: F401
+                                  get_partitioner, register_partitioner)
 from repro.fl.experiment.frameworks import (FRAMEWORKS,  # noqa: F401
                                             UnlearnContext, UnlearnFramework,
                                             get_framework, register_framework,
                                             run_unlearn)
+from repro.fl.families import (FAMILIES, ModelFamily,  # noqa: F401
+                               get_model_family, register_model_family)
+from repro.fl.tasks import (TASKS, TaskSpec, get_task,  # noqa: F401
+                            register_task)
 from repro.fl.experiment.scenario import (ScenarioConfig,  # noqa: F401
                                           build_session, build_simulator,
                                           run_scenario)

@@ -1,34 +1,55 @@
 """Scenario runner: one config -> simulator -> multi-stage session -> report.
 
-``ScenarioConfig`` captures everything the paper's experiments vary — task
-(image / lm), data distribution, federation scale, store kind, stage count,
-and the unlearning request schedule — and ``run_scenario`` executes it
-through ``FederatedSession``.  The benchmark suite (``benchmarks/common.py``)
-and ``examples/quickstart.py`` build on these helpers instead of hand-rolling
+``ScenarioConfig`` captures everything the paper's experiments vary — and,
+through three registries, everything they *didn't*: the task
+(``TASKS``: classification / generation), the model family (``FAMILIES``:
+cnn / transformer / mamba / rwkv6 / moe — the latter two training through
+their Pallas kernel ops), the client partitioner (``PARTITIONERS``: iid /
+primary-class / buckets / dirichlet / zipf), the store kind, stage count,
+and the unlearning request schedule.  ``run_scenario`` executes it through
+``FederatedSession``.  The benchmark suite (``benchmarks/common.py``) and
+``examples/`` build on these helpers instead of hand-rolling
 model/data/simulator setup.
+
+Every registry key is validated in ``__post_init__`` with an actionable
+error (unknown keys list the registered entries), so a typo'd name fails at
+config construction instead of as a deep ``KeyError``.  The pre-registry
+spellings — ``task="image" | "lm"`` and ``iid=True/False`` — keep working as
+``DeprecationWarning`` shims that map onto the registries bit-identically.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from typing import Optional, Tuple
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.configs import FLConfig, OptimizerConfig, get_config
-from repro.data import (client_datasets_images, client_datasets_lm,
-                        lm_examples, make_char_data, make_image_data)
+from repro.checkpoint.store import STORES
+from repro.configs import FLConfig, OptimizerConfig
+from repro.data.federated import get_partitioner
+from repro.fl.experiment.frameworks import FRAMEWORKS
 from repro.fl.experiment.session import (FederatedSession, RequestSchedule,
                                          SessionReport)
+from repro.fl.experiment.stage import ENGINES
+from repro.fl.families import get_model_family
 from repro.fl.simulator import FLSimulator
+from repro.fl.tasks import get_task
+
+DTypeLike = Union[str, np.dtype, type]
+
+_TASK_ALIASES = {"image": "classification", "lm": "generation"}
 
 
 @dataclass
 class ScenarioConfig:
     """One experiment scenario (defaults = the CPU-container scale)."""
-    # task / data
-    task: str = "image"               # "image" | "lm"
-    iid: bool = True
+    # task / model / data — registry keys (TASKS / FAMILIES / PARTITIONERS)
+    task: str = "classification"
+    model: str = ""                   # "" -> the task's default family
+    partitioner: str = "iid"
+    partitioner_kwargs: Dict[str, Any] = field(default_factory=dict)
+    iid: Optional[bool] = None        # DEPRECATED -> partitioner=
     seed: int = 0
     samples_per_client: int = 80
     image_size: int = 14
@@ -42,7 +63,7 @@ class ScenarioConfig:
     local_epochs: int = 4
     global_rounds: int = 6
     retrain_ratio: float = 2.0
-    # optimizer (None -> per-task default)
+    # optimizer (None -> per-family/per-task default)
     opt_name: str = "sgd"
     lr: Optional[float] = None
     local_batch: Optional[int] = None
@@ -50,11 +71,80 @@ class ScenarioConfig:
     store: str = "coded"
     engine: str = "fused"                # "stage" | "fused" | "legacy"
     encode_group: Optional[int] = None
-    slice_dtype: object = None
+    slice_dtype: Optional[DTypeLike] = None
     num_stages: int = 1
     schedule: Optional[RequestSchedule] = None
     batch_requests: bool = False         # merge requests due after each stage
     strict_schedule: bool = False        # raise on never-served requests
+
+    # ------------------------------------------------------------ validation
+    def __post_init__(self):
+        self._apply_deprecated_spellings()
+        task = get_task(self.task)           # raises listing TASKS
+        self.task = task.name
+        if not self.model:
+            self.model = task.default_family
+        family = get_model_family(self.model)  # raises listing FAMILIES
+        self.model = family.name
+        if family.task != task.kind:
+            raise ValueError(
+                f"model family {self.model!r} plays task {family.task!r}, "
+                f"not {task.name!r}; pick a family whose task matches "
+                f"(see repro.fl.families.FAMILIES)")
+        # raises listing PARTITIONERS, or the accepted kwarg names on a
+        # typo'd parameter (e.g. dirichlet alpha)
+        get_partitioner(self.partitioner, **self.partitioner_kwargs)
+        if self.store not in STORES:
+            raise ValueError(f"unknown store {self.store!r}; registered: "
+                             f"{sorted(STORES)}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; use one of "
+                             f"{ENGINES}")
+        if self.schedule is not None:
+            for r in self.schedule.requests:
+                if r.framework not in FRAMEWORKS:
+                    raise ValueError(
+                        f"scheduled request uses unknown unlearning "
+                        f"framework {r.framework!r}; registered: "
+                        f"{sorted(FRAMEWORKS)}")
+        if self.clients_per_round > self.num_clients:
+            raise ValueError(
+                f"clients_per_round={self.clients_per_round} exceeds "
+                f"num_clients={self.num_clients}")
+        if self.num_shards < 1 or self.clients_per_round % self.num_shards:
+            raise ValueError(
+                f"num_shards={self.num_shards} must divide the "
+                f"clients_per_round={self.clients_per_round} clients sampled "
+                f"per stage (each shard gets clients_per_round/num_shards "
+                f"clients)")
+        if self.slice_dtype is not None:
+            try:
+                np.dtype(self.slice_dtype)
+            except TypeError:
+                raise ValueError(
+                    f"slice_dtype {self.slice_dtype!r} is not a dtype; use "
+                    f"e.g. 'bfloat16', 'float32', or np.float16") from None
+
+    def _apply_deprecated_spellings(self):
+        if self.task in _TASK_ALIASES:
+            new = _TASK_ALIASES[self.task]
+            warnings.warn(
+                f"ScenarioConfig(task={self.task!r}) is deprecated; use "
+                f"task={new!r} (optionally with model=...)",
+                DeprecationWarning, stacklevel=4)
+            self.task = new
+        if self.iid is not None:
+            iid, self.iid = self.iid, None
+            warnings.warn(
+                "ScenarioConfig(iid=...) is deprecated; use partitioner= "
+                "('iid', 'primary-class', 'buckets', 'dirichlet', 'zipf')",
+                DeprecationWarning, stacklevel=4)
+            if self.partitioner != "iid":
+                raise ValueError(
+                    "pass either the deprecated iid= flag or partitioner=, "
+                    "not both")
+            if not iid:
+                self.partitioner = get_task(self.task).legacy_skew
 
     def fl_config(self) -> FLConfig:
         return FLConfig(num_clients=self.num_clients,
@@ -78,49 +168,22 @@ TestData = Tuple[np.ndarray, np.ndarray]
 
 
 def build_simulator(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
-    """Build the paper-protocol simulator + held-out test set for a scenario."""
-    if cfg.task == "image":
-        return _build_image(cfg)
-    if cfg.task == "lm":
-        return _build_lm(cfg)
-    raise ValueError(f"unknown task {cfg.task!r}; use 'image' or 'lm'")
-
-
-def _build_image(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
-    model = dataclasses.replace(get_config("cnn-paper"),
-                                image_size=cfg.image_size, d_model=48,
-                                cnn_channels=(8, 16))
-    data = make_image_data(cfg.num_clients * cfg.samples_per_client,
-                           image_size=cfg.image_size, seed=cfg.seed,
-                           noise=cfg.noise)
-    clients = client_datasets_images(data, cfg.num_clients, iid=cfg.iid,
-                                     seed=cfg.seed)
-    opt = OptimizerConfig(name=cfg.opt_name, lr=cfg.lr or 0.05, grad_clip=0.0)
-    sim = FLSimulator(model, cfg.fl_config(), clients, task="image",
-                      opt_cfg=opt, local_batch=cfg.local_batch or 20,
+    """Build the paper-protocol simulator + held-out test set for a scenario,
+    resolving the task, model family, and partitioner registries."""
+    task = get_task(cfg.task)
+    family = get_model_family(cfg.model)
+    model_cfg = family.build(cfg)
+    partition = get_partitioner(cfg.partitioner, **cfg.partitioner_kwargs)
+    clients, test = task.build_data(cfg, model_cfg, partition)
+    opt = OptimizerConfig(name=cfg.opt_name,
+                          lr=cfg.lr or family.default_lr or task.default_lr,
+                          grad_clip=0.0)
+    sim = FLSimulator(model_cfg, cfg.fl_config(), clients, task=task,
+                      opt_cfg=opt,
+                      local_batch=(cfg.local_batch or family.default_batch
+                                   or task.default_batch),
                       seed=cfg.seed)
-    test = make_image_data(cfg.test_n, image_size=cfg.image_size,
-                           seed=cfg.seed + 999, noise=cfg.noise)
-    return sim, (test.images, test.labels)
-
-
-def _build_lm(cfg: ScenarioConfig) -> Tuple[FLSimulator, TestData]:
-    model = get_config("nanogpt-paper")
-    stream = make_char_data(cfg.num_clients * cfg.samples_per_client
-                            * cfg.seq_len + cfg.seq_len + 1,
-                            vocab_size=model.vocab_size, seed=cfg.seed)
-    toks, labs = lm_examples(stream, cfg.seq_len)
-    clients = client_datasets_lm(toks, labs, cfg.num_clients, iid=cfg.iid,
-                                 seed=cfg.seed)
-    opt = OptimizerConfig(name=cfg.opt_name, lr=cfg.lr or 0.3, grad_clip=0.0)
-    sim = FLSimulator(model, cfg.fl_config(), clients, task="lm",
-                      opt_cfg=opt, local_batch=cfg.local_batch or 10,
-                      seed=cfg.seed)
-    test_stream = make_char_data(cfg.test_n * cfg.seq_len + 1,
-                                 vocab_size=model.vocab_size,
-                                 seed=cfg.seed + 999)
-    tt, tl = lm_examples(test_stream, cfg.seq_len)
-    return sim, (tt, tl)
+    return sim, test
 
 
 def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:

@@ -31,7 +31,7 @@ def _features(predict, models: Dict[int, object], make_batch, xs, ys,
             lg = predict(m, make_batch(x, y))
             logits = lg if logits is None else logits + lg
         logits = (logits / len(models)).astype(jnp.float32)
-        if task == "lm":
+        if task in ("lm", "generation"):
             # per-sequence means
             ll = jax.nn.log_softmax(logits, -1)
             gold = jnp.take_along_axis(ll, y[..., None], -1)[..., 0]

@@ -1,10 +1,13 @@
 """CPU-scale federated learning + unlearning simulator (paper Sec 5).
 
-Runs the paper's experimental protocol end-to-end on the paper's own models
-(CNN classifier / NanoGPT): C clients, a sampled subset per stage split into S
-isolated shards, FedAvg within shards, intermediate-parameter storage
-(full / uncoded-shard / coded), and the four unlearning frameworks
-(FR / FE / RR / SE).
+Runs the paper's experimental protocol end-to-end on any registered task ×
+model family (``repro.fl.tasks`` / ``repro.fl.families`` — the paper's CNN
+classifier and NanoGPT, plus mamba / rwkv6 / moe): C clients, a sampled
+subset per stage split into S isolated shards, FedAvg within shards,
+intermediate-parameter storage (full / uncoded-shard / coded), and the four
+unlearning frameworks (FR / FE / RR / SE).  Task-shaped behavior (batch
+construction, per-example label counts, eval metrics) is delegated to the
+``TaskSpec``.
 
 The simulator is the *engine room*: it owns the client data, the jitted
 training/calibration steps, and evaluation.  Orchestration lives in
@@ -67,6 +70,7 @@ from repro.checkpoint.store import StoreStats, make_store
 from repro.configs.base import FLConfig, ModelConfig, OptimizerConfig
 from repro.core import coding, unlearning
 from repro.core.sharding import ShardManager, StagePlan
+from repro.fl.tasks import resolve_task
 from repro.models import loss_fn, predict_fn
 from repro.optim import make_optimizer
 from repro.optim.fisher import diag_fisher, fisher_precondition
@@ -143,11 +147,14 @@ class UnlearnResult:
 class FLSimulator:
     def __init__(self, model_cfg: ModelConfig, fl_cfg: FLConfig,
                  client_data: Dict[int, Tuple[np.ndarray, np.ndarray]],
-                 task: str, opt_cfg: Optional[OptimizerConfig] = None,
+                 task, opt_cfg: Optional[OptimizerConfig] = None,
                  local_batch: int = 20, seed: int = 0):
         self.cfg = model_cfg
         self.fl = fl_cfg
-        self.task = task                      # "image" | "lm"
+        # a registered TaskSpec (or its name; "image"/"lm" resolve as the
+        # legacy aliases of classification/generation)
+        self.task_spec = resolve_task(task)
+        self.task = self.task_spec.name
         self.opt = opt_cfg or OptimizerConfig(name="sgdm", lr=0.05, grad_clip=0.0)
         self.client_data = client_data
         self.local_batch = local_batch
@@ -310,9 +317,7 @@ class FLSimulator:
         return prog
 
     def _make_batch(self, x, y):
-        if self.task == "image":
-            return {"images": x, "labels": y}
-        return {"tokens": x, "labels": y}
+        return self.task_spec.make_batch(x, y)
 
     def _stack_client_data(self, clients: Sequence[int]):
         n_min = min(self.client_data[c][0].shape[0] for c in clients)
@@ -414,10 +419,9 @@ class FLSimulator:
         yb = jnp.asarray(ys[:nb * batch]).reshape(nb, batch, *ys.shape[1:])
         stacked = jax.tree.map(lambda *a: jnp.stack(a), *models.values())
         correct, loss = jax.device_get(self._eval_stats(stacked, xb, yb))
-        total = nb * batch * (1 if self.task == "image"
-                              else int(np.prod(ys.shape[1:])))
-        return {"acc": int(correct) / max(total, 1),
-                "loss": float(loss) / max(total, 1)}
+        total = nb * batch * self.task_spec.labels_per_example(ys.shape)
+        return self.task_spec.eval_metrics(int(correct), float(loss),
+                                           max(total, 1))
 
     def evaluate_host(self, models: Dict[int, object], xs: np.ndarray,
                       ys: np.ndarray, batch: int = 200) -> Dict[str, float]:
@@ -434,16 +438,9 @@ class FLSimulator:
                 lg = self._pf(m, b)
                 logits = lg if logits is None else logits + lg
             logits = logits / len(models)
-            if self.task == "image":
-                correct += int((logits.argmax(-1) == y).sum())
-                ll = jax.nn.log_softmax(logits.astype(jnp.float32))
-                loss_sum += float(-jnp.take_along_axis(
-                    ll, y[:, None], axis=-1).sum())
-                total += int(y.shape[0])
-            else:
-                ll = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-                gold = jnp.take_along_axis(ll, y[..., None], axis=-1)[..., 0]
-                loss_sum += float(-gold.sum())
-                correct += int((logits.argmax(-1) == y).sum())
-                total += int(np.prod(y.shape))
-        return {"acc": correct / max(total, 1), "loss": loss_sum / max(total, 1)}
+            ll = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            gold = jnp.take_along_axis(ll, y[..., None], axis=-1)[..., 0]
+            loss_sum += float(-gold.sum())
+            correct += int((logits.argmax(-1) == y).sum())
+            total += y.shape[0] * self.task_spec.labels_per_example(y.shape)
+        return self.task_spec.eval_metrics(correct, loss_sum, max(total, 1))

@@ -1,0 +1,173 @@
+"""Task registry — the learning tasks a federated scenario can run.
+
+A ``TaskSpec`` owns everything task-shaped that used to be ``if task ==
+"image"`` string dispatch spread across ``scenario.py`` and ``FLSimulator``:
+synthetic data + client partitioning, batch construction, per-example label
+counting, and the eval metrics (accuracy for classification; perplexity /
+bits-per-char for generation).  Tasks register under one or more names
+(``@register_task("classification", "image")`` — the extra names are the
+deprecated spellings the shims resolve), mirroring the ``STORES`` /
+``FRAMEWORKS`` / ``FAMILIES`` pattern: a third-party task is one subclass +
+decorator away from running through ``run_scenario`` → ``FederatedSession``
+→ coded store → SE unlearning.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple, Type
+
+import numpy as np
+
+from repro.data.synthetic import lm_examples, make_char_data, make_image_data
+
+
+class TaskSpec:
+    """Base class for tasks.  Subclass, implement the hooks, and register
+    with ``@register_task(name, *aliases)``."""
+
+    name: str = ""
+    kind: str = ""              # batch/metric shape family; defaults to name
+    default_family: str = ""    # model family used when ScenarioConfig.model=""
+    legacy_skew: str = ""       # partitioner the deprecated iid=False maps to
+    default_lr: float = 0.05
+    default_batch: int = 20
+
+    # ------------------------------------------------------------------ data
+    def build_data(self, cfg, model_cfg, partition) -> Tuple[Dict, Tuple]:
+        """Synthesize the federation's data: returns ``(clients, test)`` where
+        ``clients`` maps client id -> (x, y) arrays and ``test`` is the
+        held-out ``(x, y)`` pair.  ``partition(n, labels, num_clients, seed)``
+        is the scenario's registered client partitioner."""
+        raise NotImplementedError
+
+    # ----------------------------------------------------------------- batch
+    def make_batch(self, x, y) -> Dict:
+        raise NotImplementedError
+
+    def labels_per_example(self, y_shape) -> int:
+        """Number of supervised targets per example row (classification: 1;
+        generation: one per sequence position)."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- metrics
+    def eval_metrics(self, correct: int, loss: float,
+                     total: int) -> Dict[str, float]:
+        return {"acc": correct / max(total, 1), "loss": loss / max(total, 1)}
+
+
+TASKS: Dict[str, Type[TaskSpec]] = {}
+
+
+def register_task(*names: str):
+    """Class decorator registering a ``TaskSpec`` under ``names`` (the first
+    is canonical; the rest are accepted aliases)."""
+    if not names:
+        raise ValueError("register_task needs at least one name")
+
+    def deco(cls: Type[TaskSpec]) -> Type[TaskSpec]:
+        cls.name = names[0]
+        if not cls.kind:
+            cls.kind = names[0]
+        for n in names:
+            TASKS[n] = cls
+        return cls
+    return deco
+
+
+def get_task(name: str) -> TaskSpec:
+    try:
+        return TASKS[name]()
+    except KeyError:
+        raise ValueError(f"unknown task {name!r}; registered: "
+                         f"{sorted(TASKS)}") from None
+
+
+def resolve_task(task) -> TaskSpec:
+    """Accept a ``TaskSpec`` instance, class, or registered name."""
+    if isinstance(task, TaskSpec):
+        return task
+    if isinstance(task, type) and issubclass(task, TaskSpec):
+        return task()
+    return get_task(task)
+
+
+def _check_parts(parts, num_clients: int, partitioner_desc: str):
+    empty = [k for k, idx in enumerate(parts) if len(idx) == 0]
+    if len(parts) != num_clients or empty:
+        raise ValueError(
+            f"partitioner {partitioner_desc} produced "
+            f"{len(parts)} partitions with empty clients {empty} for "
+            f"{num_clients} clients; increase samples_per_client or soften "
+            f"the skew parameters")
+
+
+# ---------------------------------------------------------------------------
+# The paper's two tasks
+# ---------------------------------------------------------------------------
+
+@register_task("classification", "image")
+class ClassificationTask(TaskSpec):
+    """Image classification (the paper's CNN track): class-conditional
+    synthetic images, accuracy + mean NLL metrics."""
+
+    default_family = "cnn"
+    legacy_skew = "primary-class"
+    default_lr = 0.05
+    default_batch = 20
+
+    def build_data(self, cfg, model_cfg, partition):
+        data = make_image_data(cfg.num_clients * cfg.samples_per_client,
+                               image_size=cfg.image_size, seed=cfg.seed,
+                               noise=cfg.noise)
+        parts = partition(len(data.labels), data.labels, cfg.num_clients,
+                          cfg.seed)
+        _check_parts(parts, cfg.num_clients, cfg.partitioner)
+        clients = {k: (data.images[idx], data.labels[idx])
+                   for k, idx in enumerate(parts)}
+        test = make_image_data(cfg.test_n, image_size=cfg.image_size,
+                               seed=cfg.seed + 999, noise=cfg.noise)
+        return clients, (test.images, test.labels)
+
+    def make_batch(self, x, y):
+        return {"images": x, "labels": y}
+
+    def labels_per_example(self, y_shape) -> int:
+        return 1
+
+
+@register_task("generation", "lm")
+class GenerationTask(TaskSpec):
+    """Next-token generation (the paper's NanoGPT track, now open to every
+    LM family): zipfian char stream, perplexity / bits-per-char metrics."""
+
+    default_family = "transformer"
+    legacy_skew = "buckets"
+    default_lr = 0.3
+    default_batch = 10
+
+    def build_data(self, cfg, model_cfg, partition):
+        stream = make_char_data(cfg.num_clients * cfg.samples_per_client
+                                * cfg.seq_len + cfg.seq_len + 1,
+                                vocab_size=model_cfg.vocab_size, seed=cfg.seed)
+        toks, labs = lm_examples(stream, cfg.seq_len)
+        # generation examples carry no class label -> label-skew partitioners
+        # raise their own actionable error
+        parts = partition(len(toks), None, cfg.num_clients, cfg.seed)
+        _check_parts(parts, cfg.num_clients, cfg.partitioner)
+        clients = {k: (toks[idx], labs[idx]) for k, idx in enumerate(parts)}
+        test_stream = make_char_data(cfg.test_n * cfg.seq_len + 1,
+                                     vocab_size=model_cfg.vocab_size,
+                                     seed=cfg.seed + 999)
+        return clients, lm_examples(test_stream, cfg.seq_len)
+
+    def make_batch(self, x, y):
+        return {"tokens": x, "labels": y}
+
+    def labels_per_example(self, y_shape) -> int:
+        return int(np.prod(y_shape[1:]))
+
+    def eval_metrics(self, correct, loss, total):
+        nll = loss / max(total, 1)
+        return {"acc": correct / max(total, 1), "loss": nll,
+                "ppl": float(math.exp(min(nll, 30.0))),
+                "bpc": nll / math.log(2.0)}

@@ -1,17 +1,27 @@
 """Jit'd wrapper: pads D to the block size and S to the chunk, dispatches to
-the Pallas kernel (interpret off-TPU), unpads."""
+the Pallas kernel (interpret off-TPU), unpads.
+
+The op is differentiable: the forward pass runs the fused Pallas kernel, and
+the backward pass is the VJP of the pure-jnp oracle (``ref.ssm_scan_ref``) —
+the standard kernel-training recipe when the kernel itself has no hand-written
+backward.  This is what lets the mamba model family *train* through the
+kernel path (``ModelConfig.mamba_impl == "pallas"``) in the federated
+scenario zoo instead of being serve-only.
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import on_tpu
 from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
 
-def ssm_scan(dt, b, c, x, a, h0, chunk: int = 256, blk_d: int = 512):
-    """Fused selective-SSM scan. Shapes as in ref.ssm_scan_ref."""
+def _ssm_scan_fwd_only(dt, b, c, x, a, h0, chunk, blk_d):
     bsz, s, d = dt.shape
-    n = b.shape[-1]
     chunk = min(chunk, max(8, s))
     blk_d = min(blk_d, max(128, d))
     pad_s = (-s) % chunk
@@ -26,3 +36,26 @@ def ssm_scan(dt, b, c, x, a, h0, chunk: int = 256, blk_d: int = 512):
     y, h_last = ssm_scan_kernel(dt, b, c, x, a, h0, chunk=chunk, blk_d=blk_d,
                                 interpret=not on_tpu())
     return y[:, :s, :d], h_last[:, :d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssm_scan(dt, b, c, x, a, h0, chunk, blk_d):
+    return _ssm_scan_fwd_only(dt, b, c, x, a, h0, chunk, blk_d)
+
+
+def _ssm_scan_vjp_fwd(dt, b, c, x, a, h0, chunk, blk_d):
+    return _ssm_scan_fwd_only(dt, b, c, x, a, h0, chunk, blk_d), \
+        (dt, b, c, x, a, h0)
+
+
+def _ssm_scan_vjp_bwd(chunk, blk_d, res, cots):
+    _, vjp = jax.vjp(ssm_scan_ref, *res)
+    return vjp(cots)
+
+
+_ssm_scan.defvjp(_ssm_scan_vjp_fwd, _ssm_scan_vjp_bwd)
+
+
+def ssm_scan(dt, b, c, x, a, h0, chunk: int = 256, blk_d: int = 512):
+    """Fused selective-SSM scan. Shapes as in ref.ssm_scan_ref."""
+    return _ssm_scan(dt, b, c, x, a, h0, chunk, blk_d)

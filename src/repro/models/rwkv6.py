@@ -142,7 +142,12 @@ def time_mix(p, x, cfg: ModelConfig, state):
     g = jax.nn.silu(xg @ p["wg"])
     lw = _log_decay(p, xw).reshape(b, s, h, n)
     u = p["u"].astype(jnp.float32).reshape(h, n)
-    y, h_new = wkv_scan(r, k, v, lw, u, hstate)
+    if cfg.rwkv_impl == "pallas":
+        # fused WKV kernel (interpret off-TPU); backward runs the oracle VJP
+        from repro.kernels.wkv.ops import wkv
+        y, h_new = wkv(r, k, v, lw, u, hstate)
+    else:
+        y, h_new = wkv_scan(r, k, v, lw, u, hstate)
     y = _headnorm(p, y, cfg).astype(x.dtype) * g
     return y @ p["wo"], (x[:, -1], h_new)
 

@@ -1,0 +1,129 @@
+"""Partitioner-registry tests: coverage/disjointness invariants for every
+registered partitioner, Dirichlet label-skew monotone in alpha, Zipf
+quantity skew monotone in the exponent, and bit-for-bit seed
+reproducibility."""
+import numpy as np
+import pytest
+
+from repro.data.federated import (PARTITIONERS, get_partitioner,
+                                  partition_dirichlet, partition_zipf)
+
+N, CLIENTS, CLASSES = 2000, 10, 10
+
+
+def _labels(seed=0):
+    return np.random.default_rng(seed).integers(0, CLASSES, N).astype(np.int32)
+
+
+def _canonical_names():
+    return sorted({fn.partitioner_name for fn in PARTITIONERS.values()})
+
+
+class TestInvariants:
+    @pytest.mark.parametrize("name", ["iid", "dirichlet", "zipf"])
+    def test_disjoint_cover(self, name):
+        parts = PARTITIONERS[name](N, _labels(), CLIENTS, seed=3)
+        assert len(parts) == CLIENTS
+        assert all(len(p) > 0 for p in parts)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(set(allidx.tolist())), f"{name}: overlap"
+        assert set(allidx.tolist()) <= set(range(N))
+
+    @pytest.mark.parametrize("name", ["primary-class", "buckets"])
+    def test_legacy_shapes(self, name):
+        # the paper's legacy skews keep their seed semantics bit-for-bit
+        # (primary-class may duplicate filler samples across clients)
+        parts = PARTITIONERS[name](N, _labels(), CLIENTS, seed=3)
+        assert len(parts) == CLIENTS
+        allidx = np.concatenate(parts)
+        assert set(allidx.tolist()) <= set(range(N))
+
+    @pytest.mark.parametrize("name", _canonical_names())
+    def test_seed_reproducible_bit_for_bit(self, name):
+        a = PARTITIONERS[name](N, _labels(), CLIENTS, seed=7)
+        b = PARTITIONERS[name](N, _labels(), CLIENTS, seed=7)
+        c = PARTITIONERS[name](N, _labels(), CLIENTS, seed=8)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+        assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+    def test_unknown_partitioner_lists_registered(self):
+        with pytest.raises(ValueError, match="registered:.*dirichlet"):
+            get_partitioner("dirichletto")
+
+
+def _label_skew(parts, labels) -> float:
+    """Mean L1 distance between client label histograms and the global one."""
+    glob = np.bincount(labels, minlength=CLASSES) / len(labels)
+    dists = []
+    for p in parts:
+        h = np.bincount(labels[p], minlength=CLASSES) / len(p)
+        dists.append(np.abs(h - glob).sum())
+    return float(np.mean(dists))
+
+
+class TestDirichlet:
+    def test_skew_monotone_in_alpha(self):
+        labels = _labels()
+        skews = [_label_skew(partition_dirichlet(N, labels, CLIENTS, seed=0,
+                                                 alpha=a), labels)
+                 for a in (0.05, 0.5, 5.0, 50.0)]
+        assert skews[0] > skews[1] > skews[2] > skews[3], skews
+        # tiny alpha: clients are nearly single-class
+        assert skews[0] > 1.0
+        # huge alpha approaches the IID histogram
+        assert skews[-1] < 0.3
+
+    def test_needs_labels(self):
+        with pytest.raises(ValueError, match="zipf.*buckets"):
+            partition_dirichlet(N, None, CLIENTS)
+
+    def test_bad_alpha(self):
+        with pytest.raises(ValueError, match="alpha"):
+            partition_dirichlet(N, _labels(), CLIENTS, alpha=0.0)
+
+    def test_fewer_examples_than_clients_is_actionable(self):
+        labels = np.zeros(3, np.int32)
+        with pytest.raises(ValueError, match="samples_per_client"):
+            partition_dirichlet(3, labels, 5)
+
+    def test_unknown_parameter_lists_accepted(self):
+        with pytest.raises(ValueError, match="accepted:.*alpha"):
+            get_partitioner("dirichlet", alhpa=0.1)
+        with pytest.raises(ValueError, match="accepted:.*exponent"):
+            get_partitioner("zipf", seed=3)
+
+
+def _quantity_skew(parts) -> float:
+    sizes = np.asarray(sorted(len(p) for p in parts), np.float64)
+    return float(sizes[-1] / sizes[0])
+
+
+class TestZipf:
+    def test_skew_monotone_in_exponent(self):
+        ratios = [_quantity_skew(partition_zipf(N, None, CLIENTS, seed=0,
+                                                exponent=e))
+                  for e in (0.0, 0.5, 1.0, 2.0)]
+        assert ratios[0] == pytest.approx(1.0)          # equal split
+        assert ratios[0] < ratios[1] < ratios[2] < ratios[3], ratios
+        assert ratios[-1] > 50                          # heavy head at e=2
+
+    def test_sizes_sum_to_n(self):
+        parts = partition_zipf(N, None, CLIENTS, seed=1, exponent=1.5)
+        assert sum(len(p) for p in parts) == N
+
+    def test_labels_ignored(self):
+        a = partition_zipf(N, _labels(), CLIENTS, seed=2)
+        b = partition_zipf(N, None, CLIENTS, seed=2)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+class TestLegacyShim:
+    def test_iid_flag_maps_to_registry(self):
+        from repro.data import client_datasets_images, make_image_data
+        data = make_image_data(400, image_size=8, seed=0)
+        old = client_datasets_images(data, 4, iid=False, seed=5)
+        new = client_datasets_images(data, 4, partitioner="primary-class",
+                                     seed=5)
+        for k in old:
+            assert np.array_equal(old[k][0], new[k][0])
+            assert np.array_equal(old[k][1], new[k][1])

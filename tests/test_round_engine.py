@@ -15,7 +15,8 @@ from repro.configs import FLConfig, OptimizerConfig, get_config
 from repro.core import coding, unlearning
 from repro.data import client_datasets_images, make_image_data
 from repro.fl import FLSimulator
-from repro.fl.experiment import run_unlearn, train_stage
+from repro.fl.experiment import (ScenarioConfig, build_simulator, run_unlearn,
+                                 train_stage)
 
 
 def _stacked_tree(m=5, seed=0):
@@ -459,6 +460,61 @@ class TestDeprecatedShims:
             for a, b in zip(jax.tree.leaves(res_old.models[s]),
                             jax.tree.leaves(res_new.models[s])):
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestDeprecatedScenarioShims:
+    """``ScenarioConfig``'s pre-registry spellings — ``task="image"|"lm"``
+    and ``iid=True/False`` — warn, map onto the task/family/partitioner
+    registries, and build a bit-identical simulator + trained stage."""
+
+    _TINY = dict(num_clients=6, clients_per_round=4, num_shards=2,
+                 local_epochs=1, global_rounds=2, samples_per_client=10,
+                 image_size=8, test_n=20)
+
+    def test_image_noniid_spelling_bit_identical(self):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            old = ScenarioConfig(task="image", iid=False, **self._TINY)
+        new = ScenarioConfig(task="classification", model="cnn",
+                             partitioner="primary-class", **self._TINY)
+        assert (old.task, old.model, old.partitioner, old.iid) == \
+            ("classification", "cnn", "primary-class", None)
+        s_old, t_old = build_simulator(old)
+        s_new, t_new = build_simulator(new)
+        assert s_old.cfg == s_new.cfg
+        assert s_old.opt == s_new.opt and s_old.local_batch == s_new.local_batch
+        for c in s_old.client_data:
+            np.testing.assert_array_equal(s_old.client_data[c][0],
+                                          s_new.client_data[c][0])
+            np.testing.assert_array_equal(s_old.client_data[c][1],
+                                          s_new.client_data[c][1])
+        np.testing.assert_array_equal(t_old[0], t_new[0])
+        r_old = train_stage(s_old, store_kind="coded")
+        r_new = train_stage(s_new, store_kind="coded")
+        assert r_old.plan.shard_clients == r_new.plan.shard_clients
+        for s in r_new.shard_models:
+            for a, b in zip(jax.tree.leaves(r_old.shard_models[s]),
+                            jax.tree.leaves(r_new.shard_models[s])):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_lm_spelling_maps_and_matches_data(self):
+        tiny = dict(self._TINY, seq_len=12, samples_per_client=4)
+        with pytest.warns(DeprecationWarning, match="task='lm'"):
+            old = ScenarioConfig(task="lm", iid=True, **tiny)
+        new = ScenarioConfig(task="generation", model="transformer",
+                             partitioner="iid", **tiny)
+        assert (old.task, old.model, old.partitioner) == \
+            ("generation", "transformer", "iid")
+        s_old, _ = build_simulator(old)
+        s_new, _ = build_simulator(new)
+        assert s_old.cfg == s_new.cfg
+        for c in s_old.client_data:
+            np.testing.assert_array_equal(s_old.client_data[c][0],
+                                          s_new.client_data[c][0])
+
+    def test_iid_false_lm_maps_to_buckets(self):
+        with pytest.warns(DeprecationWarning, match="iid=.*deprecated"):
+            cfg = ScenarioConfig(task="generation", iid=False, **self._TINY)
+        assert cfg.partitioner == "buckets"
 
 
 class TestStoreFastPaths:
