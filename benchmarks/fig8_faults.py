@@ -1,0 +1,88 @@
+"""Fig. 8 (beyond the paper): chaos harness — recovery overhead vs fault
+rate.
+
+Serves the same single-victim-per-shard trace under increasingly hostile
+seeded fault plans and measures what recovery costs:
+
+* ``clean``    — no faults: the baseline serving wall.
+* ``erase=k``  — k coded slices unreachable per read: erasure decoding from
+  the survivors (cheapest recovery — one smaller re-interpolation).
+* ``corrupt=k``— k slices bit-corrupted per read: Berlekamp-Welch / RANSAC
+  error localization before the erasure decode (the expensive recovery).
+* ``chaos``    — corruption + erasure + transient job failures: quorum reads
+  plus the service's retry/backoff path.
+
+Every plan spares the canonical quorum subset (injector default), so each
+serve's models stay bit-identical to the clean serve while the ledger and
+``StoreStats`` record the recovery work — overhead is measured on identical
+outputs.  The derived column carries the recovery counters so the JSON
+artifact (``BENCH_fig8.json``) exposes the overhead-vs-fault-rate curve.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Scale, build_image_session, collect_report, emit
+from repro.core.sharding import even_requests
+from repro.faults import FaultPlan
+from repro.service import (RetryPolicy, UnlearningService, sequenced_trace,
+                           single_device_placement)
+
+FAULT_SEED = 7
+
+
+def _plans(seed: int):
+    return [
+        ("clean", None),
+        ("erase1", FaultPlan(seed).add("slice_erasure", count=1)),
+        ("erase3", FaultPlan(seed).add("slice_erasure", count=3)),
+        ("corrupt1", FaultPlan(seed).add("slice_corruption", count=1)),
+        ("corrupt2", FaultPlan(seed).add("slice_corruption", count=2)),
+        ("chaos", FaultPlan(seed)
+         .add("slice_corruption", count=1)
+         .add("slice_erasure", count=1)
+         .add("job_exception", rate=0.5)),
+    ]
+
+
+def run(sc: Scale, rounds=None):
+    session, _test = build_image_session(sc, iid=True)
+    record = session.run_stage()
+    plan = record.plan
+    rounds = rounds or sc.global_rounds
+    victims = even_requests(plan, plan.num_shards)
+    trace = sequenced_trace(victims, spacing=0.0, rounds=rounds)
+
+    def serve_once(fault_plan):
+        placement = single_device_placement()
+        svc = UnlearningService(session, policy="fifo", placement=placement,
+                                faults=fault_plan,
+                                retry=RetryPolicy(backoff=0.001))
+        try:
+            return svc.serve(trace)
+        finally:
+            placement.shutdown()
+            for rec in session.records:
+                if hasattr(rec.store, "attach_faults"):
+                    rec.store.attach_faults(None)
+
+    base_wall = None
+    for name, fault_plan in _plans(FAULT_SEED):
+        # warm up each plan's own decode/recovery shapes (distinct survivor
+        # sets compile distinct programs), then measure the second serve
+        serve_once(fault_plan)
+        rep = serve_once(fault_plan)
+        if base_wall is None:
+            base_wall = rep.serve_wall
+        overhead = (rep.serve_wall / base_wall - 1.0) if base_wall else 0.0
+        f = rep.faults
+        ledger = (fault_plan.ledger.kinds() if fault_plan is not None else {})
+        emit(f"fig8_faults_{name}", rep.serve_wall * 1e6,
+             f"requests={len(trace)};recoveries={f['recoveries']};"
+             f"recovered_slices={f['recovered_slices']};"
+             f"retries={f['retries']};aborts={f['aborts']};"
+             f"overhead_vs_clean={overhead:.3f};"
+             f"ledger={sum(ledger.values())}ev")
+        collect_report(f"fig8_faults_{name}", rep)
+
+
+if __name__ == "__main__":
+    run(Scale())

@@ -23,14 +23,14 @@ def _parse_row(row: str) -> dict:
 def main(argv=None) -> None:
     sys.path.insert(0, "src")
     from benchmarks import (fig3_single_request, fig4_concurrent, fig5_storage,
-                            fig6_round_engine, fig7_service, kernels_bench,
-                            table1_f1_time, theory_check)
+                            fig6_round_engine, fig7_service, fig8_faults,
+                            kernels_bench, table1_f1_time, theory_check)
     from benchmarks import common
     from benchmarks.common import Scale, emit
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,fig5,fig6,fig7,table1,"
+                    help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,table1,"
                          "theory,kernels")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (100 clients, G=30, L=10) — slow on CPU")
@@ -54,6 +54,7 @@ def main(argv=None) -> None:
         "fig5": fig5_storage.run,
         "fig6": fig6_round_engine.run,
         "fig7": fig7_service.run,
+        "fig8": fig8_faults.run,
         "table1": table1_f1_time.run,
     }
     only = args.only.split(",") if args.only else list(suites)

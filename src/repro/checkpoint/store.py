@@ -74,6 +74,12 @@ class StoreStats:
     decode_flops: int = 0
     comm_bytes_store: int = 0     # bytes moved client->server (or client<->client)
     comm_bytes_retrieve: int = 0
+    # quorum-read recovery accounting (CodedStore fault path)
+    reads: int = 0                # shard reads served
+    recovered_reads: int = 0      # reads that had to decode around a fault
+    erased_slices: int = 0        # unreachable slices tolerated across reads
+    corrupted_slices: int = 0     # corrupted slices localized + excluded
+    failed_reads: int = 0         # reads aborted: faults exceeded the budget
 
     def merge(self, other: "StoreStats") -> "StoreStats":
         """Field-wise accumulate ``other`` into self (returns self) — the one
@@ -310,6 +316,7 @@ class CodedStore:
         self._layouts: Dict[int, list] = {}          # round -> client order per shard
         self._pending: List[Tuple[int, jnp.ndarray]] = []   # deferred rounds
         self._row_layout = None               # cached flat-path geometry
+        self.faults = None                    # optional attached FaultPlan
         self.stats = StoreStats()
         self.stats.server_bytes = 16 * scheme.num_clients  # the keys
         # concurrent-read safety for interleaved serves: ``get_shard`` may
@@ -438,6 +445,13 @@ class CodedStore:
         s_dim = self.scheme.num_shards
         self.stats.encode_flops += 2 * self.scheme.num_clients * s_dim * p
 
+    def attach_faults(self, plan) -> None:
+        """Attach a ``repro.faults.FaultPlan``: its slice injectors fire on
+        every subsequent ``get_shard`` (keyed per round — every reader of a
+        round observes the same fault) and reads route through the
+        quorum-read recovery path."""
+        self.faults = plan
+
     def get(self, rnd: int, client: int):
         """Single-client retrieval decodes the client's shard and indexes it
         (the coded layout has no per-client granularity)."""
@@ -454,6 +468,13 @@ class CodedStore:
         ``available``: client ids whose slices are reachable (default: all).
         ``corrupt``: optional (C,P)-shaped noise to model erroneous slices —
         triggers the error-correcting decode path.
+
+        With an attached ``FaultPlan`` (``attach_faults``) or explicit
+        ``available``/``corrupt``, the read runs in quorum mode: missing and
+        corrupt slices are detected and decoded around
+        (``coding.decode_robust``) instead of raising, with per-read recovery
+        accounting in ``StoreStats``; faults beyond eq. 11's budget raise
+        ``coding.CodingBudgetExceeded``.
         """
         with self._lock:
             if rnd not in self._slices:
@@ -461,6 +482,7 @@ class CodedStore:
             slices = self._slices[rnd]
             layout = self._layouts[rnd]
             specs = self._specs[rnd]
+            self.stats.reads += 1
             self.stats.comm_bytes_retrieve += int(
                 self.scheme.num_shards * slices.shape[1]
                 * slices.dtype.itemsize)
@@ -469,14 +491,50 @@ class CodedStore:
         # decode outside the lock: pure function of the slice tensor, so
         # interleaved serves decode different shards concurrently
         c = self.scheme.num_clients
-        if corrupt is not None:
-            slices = slices + jnp.asarray(corrupt, slices.dtype)
-            w, bad = coding.decode_with_errors(self.scheme, slices,
-                                               use_kernel=self.use_kernel)
+        plan = self.faults
+        inj_lost: list = []
+        inj_noise: dict = {}
+        if plan is not None:
+            host = np.asarray(jax.device_get(slices)).astype(np.float32)
+            inj_lost, inj_noise = plan.slice_faults(
+                rnd, self.scheme, int(slices.shape[1]),
+                scale_ref=float(np.abs(host).mean()))
+        if corrupt is None and available is None \
+                and not inj_lost and not inj_noise:
+            ids = list(range(c))
+            w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)],
+                                      ids, use_kernel=self.use_kernel)
         else:
-            ids = list(available) if available is not None else list(range(c))
-            w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)], ids,
-                                      use_kernel=self.use_kernel)
+            if inj_noise:
+                rows = sorted(inj_noise)
+                noise = np.stack([inj_noise[r] for r in rows])
+                slices = slices.at[jnp.asarray(rows)].add(
+                    jnp.asarray(noise, slices.dtype))
+            if corrupt is not None:
+                slices = slices + jnp.asarray(corrupt, slices.dtype)
+            avail = set(available) if available is not None else set(range(c))
+            avail -= set(inj_lost)
+            # bf16 slices round-trip with ~4e-3 relative residual: scale the
+            # corruption-detection tolerance with the storage dtype
+            tol = 1e-3 if slices.dtype.itemsize >= 4 else 3e-2
+            try:
+                w, lost, bad = coding.decode_robust(
+                    self.scheme, slices, available=sorted(avail),
+                    use_kernel=self.use_kernel, tol=tol)
+            except coding.CodingBudgetExceeded:
+                with self._lock:
+                    self.stats.failed_reads += 1
+                raise
+            if lost or bad:
+                with self._lock:
+                    self.stats.recovered_reads += 1
+                    self.stats.erased_slices += len(lost)
+                    self.stats.corrupted_slices += len(bad)
+                if plan is not None:
+                    from repro.faults.events import RecoveryEvent
+                    plan.ledger.record(RecoveryEvent(
+                        "quorum_read", site=("round", rnd, "shard", shard),
+                        detail=(tuple(lost), tuple(bad))))
         for idx, (s, cs) in enumerate(layout):
             if s == shard:
                 spec = specs[idx]

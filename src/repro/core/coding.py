@@ -33,6 +33,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CodingBudgetExceeded(RuntimeError):
+    """Corruption (or erasure) beyond the correctable budget of eq. 11.
+
+    Carries the ``observed`` fault count and the scheme's ``max_errors`` so
+    callers (and tests) can assert the failure mode instead of parsing an
+    opaque stack trace.
+    """
+
+    def __init__(self, observed: int, max_errors: int,
+                 kind: str = "corrupted slices"):
+        self.observed = int(observed)
+        self.max_errors = int(max_errors)
+        self.kind = kind
+        super().__init__(
+            f"{kind} count {self.observed} exceeds the correctable budget "
+            f"max_errors={self.max_errors} (2*mu*C <= C - S, eq. 11)")
+
+
 def chebyshev_points(n: int, lo: float = -1.0, hi: float = 1.0) -> np.ndarray:
     """Chebyshev nodes — well-conditioned interpolation points."""
     k = np.arange(n)
@@ -96,6 +114,29 @@ class CodingScheme:
                 chosen.append(int(np.argmax(dmin)))
             ids = ids[np.sort(chosen)]
         return lagrange_coeff_matrix(self.alpha[ids], self.omega), ids
+
+    def quorum(self, available: Optional[Sequence[int]] = None) -> np.ndarray:
+        """The canonical S-slice read set: the well-spread subset
+        ``decode_matrix`` selects from ``available`` (default: all C).
+
+        Reads that only lose slices *outside* this subset decode through the
+        identical re-interpolation matrix — bit-identical to the fault-free
+        read (the greedy farthest-point choice never inspects rows it does
+        not pick, so removing unpicked candidates cannot change it)."""
+        ids = list(available) if available is not None \
+            else list(range(self.num_clients))
+        _, chosen = self.decode_matrix(ids)
+        return np.asarray([int(i) for i in chosen])
+
+    def reduced(self, available: Sequence[int]) -> "CodingScheme":
+        """The code restricted to ``available`` slice rows: a valid RS code
+        of the same dimension over the surviving alpha points, with the
+        correspondingly tighter error budget ``(len(available) - S) // 2``.
+        Used to run error localization after erasures."""
+        avail = np.asarray(sorted(int(i) for i in available))
+        return CodingScheme(self.num_shards, len(avail),
+                            alpha=np.asarray(self.alpha)[avail],
+                            omega=self.omega)
 
     @property
     def max_errors(self) -> int:
@@ -266,17 +307,21 @@ def locate_errors(scheme: CodingScheme, slices: np.ndarray,
     method="ransac": consensus decoding — sample S-subsets, re-encode, pick
     the largest inlier set (robust production fallback at large C).
     A consistency pre-check short-circuits the no-error case.
+
+    Raises ``CodingBudgetExceeded`` when the localized corruption exceeds
+    ``scheme.max_errors`` — beyond eq. 11's budget localization is not
+    information-theoretically sound, so failing loudly beats mis-decoding.
     """
     slices = np.asarray(slices, np.float64)
     c, p = slices.shape
     s = scheme.num_shards
     e = scheme.max_errors
-    if e == 0:
-        return np.array([], np.int64)
     # fast path: no errors at all
     resid0 = _consistency_residual(scheme, slices, np.arange(c))
     if resid0.max() < tol:
         return np.array([], np.int64)
+    if e == 0:
+        raise CodingBudgetExceeded(int((resid0 >= tol).sum()), 0)
     a = np.asarray(scheme.alpha, np.float64)
     rng = np.random.default_rng(seed)
 
@@ -291,7 +336,10 @@ def locate_errors(scheme: CodingScheme, slices: np.ndarray,
                 best_bad = np.where(r >= tol)[0]
             if inliers >= c - e:
                 break
-        return np.sort(best_bad)
+        bad = np.sort(best_bad)
+        if len(bad) > e:
+            raise CodingBudgetExceeded(len(bad), e)
+        return bad
 
     cols = rng.choice(p, size=min(num_probe, p), replace=False)
     votes = np.zeros(c)
@@ -307,11 +355,13 @@ def locate_errors(scheme: CodingScheme, slices: np.ndarray,
         e_vals = np.abs(np.polyval(e_coeffs[::-1], a))
         votes += e_vals < 0.05 * np.median(e_vals + 1e-300)
     bad = np.sort(np.where(votes > len(cols) / 2)[0])
-    # verify: decoding without the located rows must be self-consistent
+    # verify: decoding without the located rows must be self-consistent on
+    # EVERY surviving row — a median test would let one residual corruption
+    # (beyond-budget under-localization) hide among the clean majority
     good = np.setdiff1d(np.arange(c), bad)
-    if len(good) >= s:
+    if len(good) >= s and len(bad) <= e:
         r = _consistency_residual(scheme, slices, good)
-        if np.median(r[good]) < tol:
+        if r[good].max() < tol:
             return bad
     # fall back to consensus decoding
     return locate_errors(scheme, slices, num_probe, seed, tol, method="ransac")
@@ -320,13 +370,62 @@ def locate_errors(scheme: CodingScheme, slices: np.ndarray,
 def decode_with_errors(scheme: CodingScheme, slices: jnp.ndarray,
                        use_kernel: bool = False) -> Tuple[jnp.ndarray, np.ndarray]:
     """Full RS decode: localize corrupted slices, then erasure-decode without
-    them. slices: (C, P). Returns (W (S,P), bad_ids)."""
+    them. slices: (C, P). Returns (W (S,P), bad_ids).
+
+    Raises ``CodingBudgetExceeded`` when corruption exceeds eq. 11's budget.
+    """
     bad = locate_errors(scheme, np.asarray(slices, np.float64))
     good = np.setdiff1d(np.arange(scheme.num_clients), bad)
-    assert len(good) >= scheme.num_shards, "too many corrupted slices"
+    if len(good) < scheme.num_shards:
+        raise CodingBudgetExceeded(len(bad), scheme.max_errors)
     w = decode_erasure(scheme, slices[jnp.asarray(good)], list(good),
                        use_kernel=use_kernel)
     return w, bad
+
+
+def decode_robust(scheme: CodingScheme, slices: jnp.ndarray,
+                  available: Optional[Sequence[int]] = None,
+                  use_kernel: bool = False, tol: float = 1e-3,
+                  seed: int = 0
+                  ) -> Tuple[jnp.ndarray, list, list]:
+    """Quorum read: reconstruct (S, P) despite erased AND corrupted slices.
+
+    ``slices``: the full (C, P) coded array (the content of unavailable rows
+    is never read).  ``available``: the present row ids (None = all C).
+
+    Pipeline: a consistency pre-check over the surviving rows; if clean,
+    plain erasure decode from the canonical well-spread subset (bit-identical
+    to the fault-free read whenever the faults spare ``scheme.quorum()``).
+    Otherwise, error localization runs on the *reduced* scheme — the code
+    restricted to surviving alpha points, a valid RS code whose budget
+    ``(C - f - S) // 2`` tightens automatically with ``f`` erasures — and the
+    located rows are excluded before the erasure decode.
+
+    Returns ``(w, lost_ids, bad_ids)``.  Raises ``CodingBudgetExceeded``
+    when the surviving-and-clean rows cannot determine the code.
+    """
+    c = scheme.num_clients
+    avail = sorted(int(i) for i in (available if available is not None
+                                    else range(c)))
+    lost = sorted(set(range(c)) - set(avail))
+    if len(avail) < scheme.num_shards:
+        raise CodingBudgetExceeded(len(lost), c - scheme.num_shards,
+                                   kind="erased slices")
+    sub = np.asarray(jax.device_get(slices)).astype(np.float64)[avail]
+    red = scheme if not lost else scheme.reduced(avail)
+    resid = _consistency_residual(red, sub, np.arange(len(avail)))
+    if resid.max() < tol:
+        w = decode_erasure(scheme, slices[jnp.asarray(avail)], avail,
+                           use_kernel=use_kernel)
+        return w, lost, []
+    bad_local = locate_errors(red, sub, tol=tol, seed=seed)
+    bad = sorted(avail[int(i)] for i in bad_local)
+    good = [i for i in avail if i not in set(bad)]
+    if len(good) < scheme.num_shards:
+        raise CodingBudgetExceeded(len(bad), red.max_errors)
+    w = decode_erasure(scheme, slices[jnp.asarray(good)], good,
+                       use_kernel=use_kernel)
+    return w, lost, bad
 
 
 # ---------------------------------------------------------------------------

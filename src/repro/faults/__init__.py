@@ -1,0 +1,19 @@
+"""Deterministic fault injection and recovery (the chaos harness).
+
+``FaultPlan`` composes seeded injectors (registered in ``INJECTORS``) that
+fire at well-defined sites in the store, session, and service layers; every
+firing and every downstream recovery decision lands in a ``FaultLedger``
+whose ``signature()`` is reproducible bit-for-bit from the plan seed.
+"""
+from repro.faults.events import (DegradedModeEvent, DeviceFault, FaultError,
+                                 FaultEvent, FaultLedger, JobHang,
+                                 RecoveryEvent, TransientJobError)
+from repro.faults.plan import (INJECTORS, FaultInjector, FaultPlan,
+                               chaos_plan, make_injector, register_injector)
+
+__all__ = [
+    "DegradedModeEvent", "DeviceFault", "FaultError", "FaultEvent",
+    "FaultLedger", "JobHang", "RecoveryEvent", "TransientJobError",
+    "INJECTORS", "FaultInjector", "FaultPlan", "chaos_plan",
+    "make_injector", "register_injector",
+]

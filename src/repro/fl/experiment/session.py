@@ -149,7 +149,7 @@ class FederatedSession:
     def __init__(self, sim, store_kind: str = "coded", engine: str = "fused",
                  encode_group: Optional[int] = None, slice_dtype=None,
                  rounds: Optional[int] = None, batch_requests: bool = False,
-                 strict_schedule: bool = False):
+                 strict_schedule: bool = False, faults=None):
         self.sim = sim
         self.store_kind = store_kind
         self.engine = engine
@@ -158,6 +158,7 @@ class FederatedSession:
         self.rounds = rounds
         self.batch_requests = batch_requests
         self.strict_schedule = strict_schedule
+        self.faults = faults                     # optional FaultPlan
         self.records: List[object] = []          # StageRecord per stage
         self.report = SessionReport(store_kind=store_kind)
 
@@ -168,7 +169,8 @@ class FederatedSession:
         record = train_stage(self.sim, store_kind=self.store_kind,
                              rounds=rounds or self.rounds, engine=self.engine,
                              encode_group=self.encode_group,
-                             slice_dtype=self.slice_dtype)
+                             slice_dtype=self.slice_dtype,
+                             faults=self.faults)
         wall = time.perf_counter() - t0
         self.records.append(record)
         self.report.stages.append(StageReport(

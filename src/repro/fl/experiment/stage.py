@@ -42,7 +42,7 @@ ENGINES = ("stage", "fused", "legacy")
 
 def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
                 engine: str = "fused", encode_group: Optional[int] = None,
-                slice_dtype=None):
+                slice_dtype=None, faults=None):
     """One stage: sample clients, split into shards, G FedAvg rounds per
     shard, storing intermediate params in the requested (registered) store.
 
@@ -54,6 +54,12 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     inside the program).  ``slice_dtype`` optionally stores coded slices in
     e.g. bf16.
 
+    ``faults`` (a ``repro.faults.FaultPlan``) applies the plan's client
+    dropout to the freshly sampled stage (clients vanish before training —
+    shards may go ragged, which the stage engine tolerates by degrading to
+    the per-shard fused path, recorded as a ``DegradedModeEvent`` instead of
+    a warning) and attaches the plan's slice injectors to the stage's store.
+
     Returns a ``StageRecord``.
     """
     if engine not in ENGINES:
@@ -62,6 +68,8 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
         if encode_group is not None or slice_dtype is not None:
             raise ValueError("encode_group/slice_dtype need engine="
                              "'fused' or 'stage'")
+        if faults is not None:
+            raise ValueError("fault plans need engine='fused' or 'stage'")
         return _train_stage_legacy(sim, store_kind, rounds)
     if engine == "stage" and encode_group is not None:
         raise ValueError("encode_group is a fused-engine option; the stage "
@@ -72,9 +80,20 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     plan = sim.mgr.new_stage()
     rng = jax.random.key(sim.seed + plan.stage)
     w0 = init_params(sim.cfg, rng)
+    dropped = []
+    if faults is not None:
+        by_shard = faults.dropped_clients(plan.stage, plan.shard_clients)
+        for s, cs in by_shard.items():
+            gone = set(cs)
+            plan.shard_clients[s] = [c for c in plan.shard_clients[s]
+                                     if c not in gone]
+            dropped.extend(cs)
+        dropped.sort()
     store = sim._make_store(store_kind, plan,
                             group_rounds=encode_group or g_rounds,
                             slice_dtype=slice_dtype)
+    if faults is not None and hasattr(store, "attach_faults"):
+        store.attach_faults(faults)
     # the store's preferred payload form decides what the jitted round step
     # computes on device; anything unknown degrades to stacked trees.
     kind = "flat" if getattr(store, "wants", "stacked") == "flat" else "stacked"
@@ -85,10 +104,17 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
         if _stackable(plan, data):
             return _run_stage_program(sim, plan, store, w0, data, g_rounds,
                                       kind, slice_dtype)
-        warnings.warn(
-            "ragged stage (unequal client or sample counts per shard); "
-            "stage engine degrading to per-shard fused dispatch",
-            stacklevel=2)
+        if faults is not None:
+            from repro.faults.events import DegradedModeEvent
+            faults.ledger.record(DegradedModeEvent(
+                stage=plan.stage,
+                reason="ragged_stage", fallback="fused",
+                dropped_clients=tuple(dropped)))
+        else:
+            warnings.warn(
+                "ragged stage (unequal client or sample counts per shard); "
+                "stage engine degrading to per-shard fused dispatch",
+                stacklevel=2)
     return _run_fused(sim, plan, store, w0, data, g_rounds, kind)
 
 

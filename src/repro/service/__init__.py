@@ -17,8 +17,8 @@ throughput, and SLA hit rate (``engine``).
     report = service.serve(trace)
     print(report.p95, report.throughput)
 """
-from repro.service.engine import (LedgerEntry, ServiceReport,  # noqa: F401
-                                  UnlearningService)
+from repro.service.engine import (LedgerEntry, RetryPolicy,  # noqa: F401
+                                  ServiceReport, UnlearningService)
 from repro.service.placement import (DevicePlacement,  # noqa: F401
                                      single_device_placement)
 from repro.service.policy import (POLICIES, BatchWindowPolicy,  # noqa: F401

@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.faults.events import (DeviceFault, FaultError, JobHang,
+                                 RecoveryEvent)
 from repro.fl.experiment.frameworks import (FRAMEWORKS, UnlearnContext,
                                             get_framework, run_prepared_job)
 from repro.fl.experiment.session import UnlearnRequest
@@ -53,6 +55,37 @@ from repro.fl.simulator import UnlearnResult
 from repro.service.placement import DevicePlacement
 from repro.service.policy import Pending, SchedulingPolicy, make_policy
 from repro.service.workload import ServiceRequest, VirtualClock
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How the service reacts to a failed job attempt.
+
+    ``max_retries`` bounds re-dispatches per job (after which the job aborts
+    cleanly into the ledger); ``backoff``/``backoff_factor``/``max_backoff``
+    shape the bounded exponential sleep between attempts.  ``timeout`` caps
+    the *simulated* hang of an injected ``JobHang`` — it deliberately does
+    NOT arm a wall-clock watchdog on real jobs, because elapsed-time-based
+    fault events would vary run-to-run and break ledger replay (and a stuck
+    XLA program cannot be preempted from a worker thread anyway; genuine
+    hang isolation needs a process boundary).
+    """
+    max_retries: int = 2
+    timeout: Optional[float] = None
+    backoff: float = 0.02
+    backoff_factor: float = 2.0
+    max_backoff: float = 0.25
+
+    def backoff_for(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (1-based)."""
+        return min(self.backoff * self.backoff_factor ** (attempt - 1),
+                   self.max_backoff)
+
+    def describe(self) -> dict:
+        return {"max_retries": self.max_retries, "timeout": self.timeout,
+                "backoff": self.backoff,
+                "backoff_factor": self.backoff_factor,
+                "max_backoff": self.max_backoff}
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +118,9 @@ class LedgerEntry:
     cost_units: float = 0.0
     deadline: Optional[float] = None
     sla_met: Optional[bool] = None
+    job_attempts: int = 0             # total attempts across this serve's jobs
+    job_retries: int = 0              # attempts beyond the first
+    aborted: bool = False             # some job exhausted its retry budget
 
     def to_dict(self) -> dict:
         return {
@@ -96,7 +132,8 @@ class LedgerEntry:
             "n_jobs": self.n_jobs, "devices": list(self.devices),
             "impacted": [list(p) for p in self.impacted],
             "cost_units": self.cost_units, "deadline_s": self.deadline,
-            "sla_met": self.sla_met,
+            "sla_met": self.sla_met, "job_attempts": self.job_attempts,
+            "job_retries": self.job_retries, "aborted": self.aborted,
         }
 
 
@@ -109,15 +146,24 @@ class ServiceReport:
     placement: dict = field(default_factory=dict)
     serve_wall: float = 0.0
     num_batches: int = 0
+    faults: dict = field(default_factory=dict)   # attempts/retries/recoveries
 
     # ------------------------------------------------------------ aggregates
     @property
+    def completed(self) -> List[LedgerEntry]:
+        """Entries whose jobs all finished (aborted serves excluded — their
+        latencies describe the failure, not the service)."""
+        return [e for e in self.entries if not e.aborted]
+
+    @property
     def latencies(self) -> np.ndarray:
-        return np.asarray([e.latency for e in self.entries], np.float64)
+        return np.asarray([e.latency for e in self.completed], np.float64)
 
     def percentile(self, q: float) -> float:
+        """Latency percentile over completed requests; ``nan`` when the
+        ledger is empty or every request aborted (never raises)."""
         lat = self.latencies
-        return float(np.percentile(lat, q)) if lat.size else 0.0
+        return float(np.percentile(lat, q)) if lat.size else float("nan")
 
     @property
     def p50(self) -> float:
@@ -133,15 +179,26 @@ class ServiceReport:
 
     @property
     def throughput(self) -> float:
-        """Requests served per measured serving second."""
-        return len(self.entries) / self.serve_wall if self.serve_wall else 0.0
+        """Completed requests per measured serving second; ``nan`` for an
+        empty/all-aborted ledger or an unmeasured serve (never raises)."""
+        done = len(self.completed)
+        if not done or self.serve_wall <= 0.0:
+            return float("nan")
+        return done / self.serve_wall
 
     @property
     def sla_hit_rate(self) -> Optional[float]:
-        verdicts = [e.sla_met for e in self.entries if e.sla_met is not None]
+        """Fraction of deadline-carrying completed requests that met their
+        deadline; ``None`` when no completed request had a deadline."""
+        verdicts = [e.sla_met for e in self.completed
+                    if e.sla_met is not None]
         if not verdicts:
             return None
         return sum(verdicts) / len(verdicts)
+
+    @property
+    def num_aborted(self) -> int:
+        return sum(1 for e in self.entries if e.aborted)
 
     @property
     def total_retrain_wall(self) -> float:
@@ -153,12 +210,14 @@ class ServiceReport:
             "placement": self.placement,
             "num_requests": len(self.entries),
             "num_batches": self.num_batches,
+            "num_aborted": self.num_aborted,
             "serve_wall_s": self.serve_wall,
             "throughput_rps": self.throughput,
             "latency_p50_s": self.p50,
             "latency_p95_s": self.p95,
             "latency_p99_s": self.p99,
             "sla_hit_rate": self.sla_hit_rate,
+            "faults": self.faults,
             "requests": [e.to_dict() for e in self.entries],
         }
 
@@ -206,12 +265,66 @@ class UnlearningService:
 
     def __init__(self, session, policy="fifo",
                  policy_opts: Optional[dict] = None,
-                 placement: Optional[DevicePlacement] = None):
+                 placement: Optional[DevicePlacement] = None,
+                 faults=None, retry: Optional[RetryPolicy] = None):
         self.session = session
         self.policy: SchedulingPolicy = (
             make_policy(policy, **(policy_opts or {}))
             if isinstance(policy, str) else policy)
         self.placement = placement or DevicePlacement()
+        self.faults = faults                      # optional FaultPlan
+        self.retry = retry or RetryPolicy()
+
+    # ------------------------------------------------------------- recovery
+    def _attempt_with_retries(self, key: tuple, dev_idx: int, body):
+        """Run ``body(dev_idx)`` with the service's recovery semantics:
+        consult the fault plan per attempt (straggler delay / injected
+        error), catch ONLY typed ``FaultError``s (genuine bugs propagate),
+        mark failed/hung devices unhealthy and re-dispatch to the next
+        healthy one, back off exponentially between attempts, and abort
+        cleanly once ``retry.max_retries`` re-dispatches are spent.
+
+        Returns ``(result_or_None, dev_idx, attempts, aborted)``.
+        """
+        plan, rp = self.faults, self.retry
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                err = None
+                if plan is not None:
+                    delay, err = plan.job_action(key, attempts, dev_idx)
+                    if delay:
+                        time.sleep(delay)
+                if err is not None:
+                    if isinstance(err, JobHang):
+                        hang = err.hang_s if rp.timeout is None \
+                            else min(err.hang_s, rp.timeout)
+                        time.sleep(max(hang, 0.0))
+                    raise err
+                return body(dev_idx), dev_idx, attempts, False
+            except FaultError as exc:
+                if isinstance(exc, (DeviceFault, JobHang)):
+                    self.placement.mark_unhealthy(dev_idx)
+                if attempts > rp.max_retries:
+                    if plan is not None:
+                        plan.ledger.record(RecoveryEvent(
+                            "abort", site=key,
+                            detail=(attempts, type(exc).__name__)))
+                    return None, dev_idx, attempts, True
+                time.sleep(rp.backoff_for(attempts))
+                if isinstance(exc, (DeviceFault, JobHang)):
+                    # device-level fault: re-dispatch to the next healthy
+                    # device (deterministic; never consumes the rr cursor)
+                    dev_idx = self.placement.reassign(dev_idx)
+                    event = "redispatch"
+                else:
+                    # job-level transient: same device, fresh attempt
+                    event = "retry"
+                if plan is not None:
+                    plan.ledger.record(RecoveryEvent(
+                        event, site=key,
+                        detail=(attempts, type(exc).__name__)))
 
     # ----------------------------------------------------------- scheduling
     def _impact_of(self, req: ServiceRequest) -> frozenset:
@@ -290,15 +403,23 @@ class UnlearningService:
         ctx = serve.stage_ctxs[stage]
         fw = get_framework(serve.framework)
         start = time.perf_counter() - t0
-        job = fw.prepare_shard_job(ctx, shard)
-        if job is None:
-            return {"models": {}, "cost": 0.0, "start": start,
-                    "done": time.perf_counter() - t0, "device": dev_idx}
-        device = self.placement.device_of(dev_idx)
-        s, w, cost = run_prepared_job(ctx, job, device=device)
-        jax.block_until_ready(w)
-        return {"models": {s: w}, "cost": cost, "start": start,
-                "done": time.perf_counter() - t0, "device": dev_idx}
+
+        def body(dev: int):
+            job = fw.prepare_shard_job(ctx, shard)
+            if job is None:
+                return {"models": {}, "cost": 0.0}
+            s, w, cost = run_prepared_job(ctx, job,
+                                          device=self.placement.device_of(dev))
+            jax.block_until_ready(w)
+            return {"models": {s: w}, "cost": cost}
+
+        key = ("shard", stage, shard, tuple(serve.clients))
+        out, dev_idx, attempts, aborted = self._attempt_with_retries(
+            key, dev_idx, body)
+        if out is None:
+            out = {"models": {}, "cost": 0.0}
+        return {**out, "start": start, "done": time.perf_counter() - t0,
+                "device": dev_idx, "attempts": attempts, "aborted": aborted}
 
     def _job_federation(self, serve: _Serve, stage: int, dev_idx: int,
                         t0: float):
@@ -308,10 +429,19 @@ class UnlearningService:
         ctx = serve.stage_ctxs[stage]
         fw = get_framework(serve.framework)
         start = time.perf_counter() - t0
-        models, cost = fw.run(ctx)
-        jax.block_until_ready(list(models.values()))
-        return {"models": models, "cost": cost, "start": start,
-                "done": time.perf_counter() - t0, "device": dev_idx}
+
+        def body(dev: int):
+            models, cost = fw.run(ctx)
+            jax.block_until_ready(list(models.values()))
+            return {"models": models, "cost": cost}
+
+        key = ("federation", stage, tuple(serve.clients))
+        out, dev_idx, attempts, aborted = self._attempt_with_retries(
+            key, dev_idx, body)
+        if out is None:
+            out = {"models": {}, "cost": 0.0}
+        return {**out, "start": start, "done": time.perf_counter() - t0,
+                "device": dev_idx, "attempts": attempts, "aborted": aborted}
 
     def _dispatch(self, serves: List[_Serve], t0: float):
         for serve in serves:
@@ -377,6 +507,11 @@ class UnlearningService:
             start_off = min(starts) if starts else serve.dispatch_off
             batch_wait = start_off - serve.dispatch_off
             retrain_wall = done_off - start_off
+            attempts = sum(o.get("attempts", 1) for os_ in outs.values()
+                           for o in os_)
+            n_jobs_total = sum(len(v) for v in outs.values())
+            aborted = any(o.get("aborted", False) for os_ in outs.values()
+                          for o in os_)
             for p in serve.requests:
                 queue_wait = serve.batch.time - p.req.t
                 latency = queue_wait + batch_wait + retrain_wall
@@ -390,7 +525,10 @@ class UnlearningService:
                     cost_units=total_cost / max(len(serve.requests), 1),
                     deadline=p.req.deadline,
                     sla_met=(latency <= p.req.deadline
-                             if p.req.deadline is not None else None))
+                             if p.req.deadline is not None else None),
+                    job_attempts=attempts,
+                    job_retries=attempts - n_jobs_total,
+                    aborted=aborted)
                 report.entries.append(entry)
 
     # ---------------------------------------------------------------- serve
@@ -403,6 +541,12 @@ class UnlearningService:
             raise RuntimeError("train at least one stage before serving")
         batches = self.plan_schedule(trace)
         self.placement.reset_assignment()
+        self.placement.reset_health()
+        if self.faults is not None:
+            for rec in self.session.records:
+                if hasattr(rec.store, "attach_faults"):
+                    rec.store.attach_faults(self.faults)
+        rec_before = self._recovery_counters()
         report = ServiceReport(policy=self.policy.describe(),
                                placement=self.placement.describe(),
                                num_batches=len(batches))
@@ -416,4 +560,39 @@ class UnlearningService:
         report.serve_wall = time.perf_counter() - t0
         report.placement = self.placement.describe()   # incl. job counters
         report.entries.sort(key=lambda e: e.rid)
+        rec_after = self._recovery_counters()
+        attempts = retries = aborts = 0
+        for serve_ in all_serves:
+            for futs in serve_.stage_jobs.values():
+                for f in futs:                       # results already cached
+                    o = f.result()
+                    attempts += o.get("attempts", 1)
+                    retries += o.get("attempts", 1) - 1
+                    aborts += int(o.get("aborted", False))
+        report.faults = {
+            "attempts": attempts, "retries": retries, "aborts": aborts,
+            "recoveries": rec_after["recovered_reads"]
+            - rec_before["recovered_reads"],
+            "recovered_slices": rec_after["slices"] - rec_before["slices"],
+            "failed_reads": rec_after["failed_reads"]
+            - rec_before["failed_reads"],
+            "retry_policy": self.retry.describe(),
+        }
+        if self.faults is not None:
+            report.faults["ledger"] = self.faults.ledger.kinds()
         return report
+
+    def _recovery_counters(self) -> dict:
+        """Quorum-read recovery totals across the session's (unique) stores
+        — diffed around a serve to report per-serve recoveries."""
+        out = {"recovered_reads": 0, "slices": 0, "failed_reads": 0}
+        for store in {id(r.store): r.store
+                      for r in self.session.records}.values():
+            stats = getattr(store, "stats", None)
+            if stats is None:
+                continue
+            out["recovered_reads"] += getattr(stats, "recovered_reads", 0)
+            out["slices"] += (getattr(stats, "erased_slices", 0)
+                              + getattr(stats, "corrupted_slices", 0))
+            out["failed_reads"] += getattr(stats, "failed_reads", 0)
+        return out

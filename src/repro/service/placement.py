@@ -50,6 +50,7 @@ class DevicePlacement:
         self._lock = threading.Lock()
         self._pool: Optional[ThreadPoolExecutor] = None
         self._submitted = 0
+        self._unhealthy: set = set()
 
     # ------------------------------------------------------------ assignment
     @property
@@ -77,6 +78,34 @@ class DevicePlacement:
     def device_of(self, index: int):
         return self.devices[index % len(self.devices)]
 
+    # ---------------------------------------------------------------- health
+    def mark_unhealthy(self, index: int) -> None:
+        """Flag a device as failed.  ``assign`` deliberately keeps routing
+        round-robin over ALL devices — the initial dispatch plan stays a
+        deterministic function of the trace even under faults — and only
+        ``reassign`` (the retry path) avoids unhealthy devices."""
+        with self._lock:
+            self._unhealthy.add(index % len(self.devices))
+
+    def reset_health(self) -> None:
+        """Clear fault state — called at the top of every serve so each
+        serve (and each replay) starts from the same health picture."""
+        with self._lock:
+            self._unhealthy.clear()
+
+    def reassign(self, avoid: int) -> int:
+        """Deterministic re-dispatch target after a device fault: the first
+        healthy device after ``avoid``.  Never raises and never touches the
+        round-robin cursor — with every device unhealthy it returns
+        ``avoid`` so the caller's bounded-retry abort path still completes."""
+        with self._lock:
+            n = len(self.devices)
+            for step in range(1, n + 1):
+                idx = (avoid + step) % n
+                if idx not in self._unhealthy:
+                    return idx
+            return avoid % n
+
     # -------------------------------------------------------------- dispatch
     def submit(self, fn: Callable, *args, **kw) -> Future:
         """Run ``fn(*args, **kw)`` on the worker pool.  The callable is
@@ -92,15 +121,31 @@ class DevicePlacement:
         return self._pool.submit(fn, *args, **kw)
 
     def shutdown(self):
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-            self._pool = None
+        """Idempotent and thread-safe: the pool is detached under the lock,
+        torn down outside it, and later calls are no-ops."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    # ------------------------------------------------------- context manager
+    def __enter__(self) -> "DevicePlacement":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        """Always shut the worker pool down — a serve raising mid-flight
+        must not leak threads."""
+        self.shutdown()
+        return False
 
     def describe(self) -> dict:
+        with self._lock:
+            unhealthy = sorted(self._unhealthy)
         return {"devices": [str(d) for d in self.devices],
                 "num_devices": self.num_devices,
                 "max_workers": self.max_workers,
-                "jobs_submitted": self._submitted}
+                "jobs_submitted": self._submitted,
+                "unhealthy": unhealthy}
 
 
 def single_device_placement() -> DevicePlacement:

@@ -1,0 +1,99 @@
+"""Child process for the device-failure chaos test: forced to 4 virtual CPU
+devices via XLA_FLAGS (must be set before jax import — hence the subprocess),
+it trains one tiny stage, serves a 4-victim trace fault-free, then serves the
+same trace twice under a plan that kills device 0 — every request must still
+complete (re-dispatched to healthy devices) with models bit-identical to the
+fault-free serve and an identical replayed fault ledger.  Prints one JSON
+line the parent test asserts on."""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import FLConfig, OptimizerConfig, get_config  # noqa: E402
+from repro.core.sharding import even_requests  # noqa: E402
+from repro.data import client_datasets_images, make_image_data  # noqa: E402
+from repro.faults import FaultPlan  # noqa: E402
+from repro.fl import FLSimulator  # noqa: E402
+from repro.fl.experiment import FederatedSession  # noqa: E402
+from repro.service import (DevicePlacement, RetryPolicy,  # noqa: E402
+                           UnlearningService, sequenced_trace)
+
+FAULT_SEED = int(os.environ.get("REPRO_FAULT_SEED", "7"))
+
+
+def _chaos_plan():
+    return FaultPlan(seed=FAULT_SEED).add("device_failure", device=0)
+
+
+def serve_once(session, trace, plan):
+    placement = DevicePlacement()
+    svc = UnlearningService(session, policy="window",
+                            policy_opts={"width": 1.0}, placement=placement,
+                            faults=plan, retry=RetryPolicy(backoff=0.001))
+    try:
+        report = svc.serve(trace)
+    finally:
+        placement.shutdown()
+        for rec in session.records:
+            if hasattr(rec.store, "attach_faults"):
+                rec.store.attach_faults(None)
+    return report, report.placement["unhealthy"]
+
+
+def main():
+    fl = FLConfig(num_clients=12, clients_per_round=8, num_shards=4,
+                  local_epochs=2, global_rounds=2, retrain_ratio=2.0)
+    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=8,
+                              d_model=16, cnn_channels=(4, 4))
+    data = make_image_data(fl.num_clients * 30, image_size=8, seed=0)
+    clients = client_datasets_images(data, fl.num_clients, iid=True)
+    sim = FLSimulator(cfg, fl, clients, task="image",
+                      opt_cfg=OptimizerConfig(name="sgdm", lr=0.05,
+                                              grad_clip=0.0),
+                      local_batch=10, seed=0)
+    session = FederatedSession(sim, store_kind="coded")
+    record = session.run_stage()
+    victims = even_requests(record.plan, 4)      # 4 distinct shards
+    trace = sequenced_trace(victims, spacing=0.0, rounds=2)
+
+    rep_ok, _ = serve_once(session, trace, None)
+    p1, p2 = _chaos_plan(), _chaos_plan()
+    rep_chaos, unhealthy = serve_once(session, trace, p1)
+    serve_once(session, trace, p2)               # replay, fresh same-seed plan
+
+    # one merged window batch per serve -> one UnlearnResult per serve
+    results = [u for st in session.report.stages for u in st.unlearn]
+    healthy, chaotic = results[0], results[1]
+    max_err = 0.0
+    for s in healthy.models:
+        for a, b in zip(jax.tree.leaves(healthy.models[s]),
+                        jax.tree.leaves(chaotic.models[s])):
+            max_err = max(max_err, float(np.max(np.abs(
+                np.asarray(a, np.float64) - np.asarray(b, np.float64)))))
+
+    print(json.dumps({
+        "num_devices": len(jax.devices()),
+        "num_requests": len(rep_chaos.entries),
+        "aborts": rep_chaos.faults["aborts"],
+        "retries": rep_chaos.faults["retries"],
+        "redispatches": p1.ledger.count("redispatch"),
+        "device_faults": p1.ledger.count("device_failure"),
+        "unhealthy": unhealthy,
+        "max_abs_err": max_err,
+        "models_bit_identical": max_err == 0.0,
+        "ledger_replay_identical":
+            p1.ledger.signature() == p2.ledger.signature(),
+        "healthy_retries": rep_ok.faults["retries"],
+    }))
+
+
+if __name__ == "__main__":
+    main()
