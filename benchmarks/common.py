@@ -62,11 +62,12 @@ Scale.__doc__ = ("Benchmark scale knobs — defaults derived from "
 def scenario_config(sc, task: str = "classification",
                     partitioner: str = "iid", seed: int = 0,
                     **overrides) -> ScenarioConfig:
-    """Map a benchmark Scale to an experiment ScenarioConfig."""
-    return ScenarioConfig(task=task, partitioner=partitioner, seed=seed,
-                          **{name: getattr(sc, name)
-                             for name in _SCALE_FIELDS},
-                          **overrides)
+    """Map a benchmark Scale to an experiment ScenarioConfig.  ``overrides``
+    win over the Scale's fields (e.g. a suite pushing ``local_epochs`` into
+    the memorization regime)."""
+    kw = {name: getattr(sc, name) for name in _SCALE_FIELDS}
+    kw.update(overrides)
+    return ScenarioConfig(task=task, partitioner=partitioner, seed=seed, **kw)
 
 
 def _partitioner(iid: bool, task: str) -> str:

@@ -1,45 +1,42 @@
 """Paper Table 1: MIA F1 score (down = better unlearning) and retraining time
 for IID and non-IID distributions, both tasks, all four registered frameworks
-— driven through ``FederatedSession`` so the per-request trajectory lands in
-the session report (exported by ``run.py --json-dir``)."""
+— driven through the forgetting-verification suite, so the reported F1 is the
+shadow-model attack (calibrated without victim labels) scored against the
+no-unlearn baseline and the retrain oracle, and the full Pareto report lands
+in ``run.py --json-dir`` output."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import (Scale, build_image_session, build_lm_session,
-                               collect_report, emit)
-from repro.fl.experiment import FRAMEWORKS, UnlearnRequest
-from repro.fl.mia import mia_f1
+from benchmarks.common import (Scale, _partitioner, collect_report, emit,
+                               scenario_config)
+from repro.fl.experiment import FRAMEWORKS
+from repro.verify import run_verification
 
 FRAMEWORK_ORDER = ("FR", "FE", "RR", "SE")
 assert all(fw in FRAMEWORKS for fw in FRAMEWORK_ORDER)
 
+TASK_TAGS = {"classification": "image", "generation": "lm"}
 
-def run(sc: Scale, tasks=("image", "lm"), iids=(True, False)):
+
+def run(sc: Scale, tasks=("classification", "generation"), iids=(True, False)):
     for task in tasks:
         for iid in iids:
-            tag = f"table1_{task}_{'iid' if iid else 'noniid'}"
-            session, test = (build_image_session if task == "image"
-                             else build_lm_session)(sc, iid=iid)
-            sim = session.sim
-            record = session.run_stage()
-            victim = record.plan.shard_clients[0][0]
-            members = [c for c in record.plan.clients if c != victim][:6]
-            mx = np.concatenate([sim.client_data[c][0][:40] for c in members])
-            my = np.concatenate([sim.client_data[c][1][:40] for c in members])
-            cost = {}
-            for fw in FRAMEWORK_ORDER:
-                res = session.unlearn(UnlearnRequest([victim],
-                                                     framework=fw))[0]
-                cost[fw] = res.cost_units
-                f1 = mia_f1(sim._pf, res.models, sim._make_batch, sim.task,
-                            (mx, my), test, sim.client_data[victim])
-                emit(f"{tag}_{fw}", res.wall_time * 1e6,
-                     f"mia_f1={f1:.4f};retrain_s={res.wall_time:.2f};"
-                     f"cost_units={res.cost_units:.0f}")
+            tag = f"table1_{TASK_TAGS[task]}_{'iid' if iid else 'noniid'}"
+            cfg = scenario_config(sc, task=task,
+                                  partitioner=_partitioner(iid, task), seed=0)
+            # Table 1's data protocol: shadow-MIA + utility, no canaries
+            report = run_verification(cfg, frameworks=FRAMEWORK_ORDER,
+                                      verifiers=("shadow-mia", "utility"),
+                                      n_shadows=2)
+            for name in FRAMEWORK_ORDER + ("oracle", "none"):
+                c = report.candidate(name)
+                emit(f"{tag}_{name}", c.wall_s * 1e6,
+                     f"mia_f1={c.metrics['mia_f1']:.4f};"
+                     f"retrain_s={c.wall_s:.2f};"
+                     f"cost_units={c.cost_units:.0f}")
+            cost = {c.name: c.cost_units for c in report.candidates}
             emit(f"{tag}_time_gain", 0.0,
                  f"gain={1 - cost['SE'] / max(cost['FR'], 1e-9):.2%}")
-            collect_report(tag, session.report)
+            collect_report(tag, report)
 
 
 if __name__ == "__main__":

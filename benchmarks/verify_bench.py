@@ -1,0 +1,52 @@
+"""Forgetting-verification suite benchmark: shadow-model MIA, canary
+injection, and the retrain oracle, per framework — the forgetting × utility ×
+cost Pareto report (``BENCH_verify.json`` via ``run.py --json-dir``).
+
+The scenario is pushed into the memorization regime (more local epochs,
+higher lr, fewer samples per client than the figure benchmarks) — both
+probes measure *memorization residue*, so the victim stage must overfit its
+clients for the no-unlearn baseline to separate from the oracle.  CI's
+``--fast`` run covers SE and FR on the classification task; the default
+scale adds FE/RR and the generation task.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Scale, collect_report, emit, scenario_config
+from repro.verify import run_verification
+
+# per-task memorization-regime overrides (classification tuned so the
+# no-unlearn canary accuracy sits far above chance at tiny scale)
+OVERRIDES = {
+    "classification": dict(lr=0.3, noise=0.35),
+    "generation": dict(),
+}
+
+
+def run(sc: Scale):
+    small = sc.num_clients < 20
+    frameworks = ("SE", "FR") if small else ("SE", "FE", "FR", "RR")
+    n_shadows = 2 if small else 3
+    tasks = ["classification"] + ([] if small else ["generation"])
+    for task in tasks:
+        cfg = scenario_config(
+            sc, task=task, partitioner="iid", seed=0,
+            local_epochs=max(sc.local_epochs, 8),
+            global_rounds=max(sc.global_rounds, 6),
+            samples_per_client=min(sc.samples_per_client, 32),
+            **OVERRIDES[task])
+        report = run_verification(cfg, frameworks=frameworks,
+                                  n_shadows=n_shadows, n_canaries=12)
+        tag = f"verify_{task}"
+        for c in report.candidates:
+            emit(f"{tag}_{c.name}", c.wall_s * 1e6,
+                 f"mia_f1={c.metrics['mia_f1']:.4f};"
+                 f"canary_acc={c.metrics['canary_acc']:.4f};"
+                 f"retain_acc={c.metrics['retain_acc']:.4f};"
+                 f"cost_units={c.cost_units:.0f}")
+        emit(f"{tag}_pareto", 0.0,
+             "front=" + "|".join(report.pareto_front()))
+        collect_report(tag, report)
+
+
+if __name__ == "__main__":
+    run(Scale())

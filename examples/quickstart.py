@@ -44,7 +44,8 @@ def main():
     members = [c for c in record.plan.clients if c != victim][:4]
     mx = np.concatenate([sim.client_data[c][0][:40] for c in members])
     my = np.concatenate([sim.client_data[c][1][:40] for c in members])
-    f1 = mia_f1(sim._pf, res.models, sim._make_batch, sim.task,
+    iface = sim.predict_interface()
+    f1 = mia_f1(iface.predict, res.models, iface.make_batch, iface.task,
                 (mx, my), (test_x, test_y), sim.client_data[victim])
     print("== membership-inference attack on the forgotten client ==")
     print(f"   attack F1 = {f1:.3f} (lower = better forgotten)")

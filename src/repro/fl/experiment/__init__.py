@@ -39,3 +39,9 @@ from repro.fl.experiment.session import (FederatedSession,  # noqa: F401
                                          StageReport, UnlearnRequest)
 from repro.fl.experiment.stage import train_stage  # noqa: F401
 from repro.fl.simulator import StageRecord, UnlearnResult  # noqa: F401
+
+# Auto-register the verification subsystem (the retrain ``oracle`` framework
+# and the VERIFIERS registry).  Plain module import — ``repro.verify`` pulls
+# only submodules of this package, never the package itself, so the cycle is
+# safe at any import order.
+import repro.verify  # noqa: F401, E402

@@ -118,6 +118,23 @@ class UnlearnContext:
     def init_model(self, salt: int = 777):
         return init_params(self.sim.cfg, jax.random.key(self.sim.seed + salt))
 
+    def stage_init_model(self):
+        """The stage's ACTUAL initial model w0 (seeded by ``plan.stage``,
+        exactly as ``train_stage`` built it) — retraining from it with a
+        client removed is the bit-exact counterfactual the retrain oracle
+        (``repro.verify.oracle``) measures against."""
+        return init_params(self.sim.cfg,
+                           jax.random.key(self.sim.seed + self.plan.stage))
+
+    def retrain_shards(self, w0, xs, ys, g_rounds: int):
+        """From-scratch FedAvg of a stacked ``(K, M, n, ...)`` batch of
+        shards at the FULL L local epochs in one dispatch (vmap-over-shards
+        × scan-over-rounds, reusing the stage engine's round body) — the
+        exact-unlearning ground-truth pass.  Returns the ``(K, ...)`` final
+        shard models."""
+        prog = self.sim._get_retrain_program(self.fl.local_epochs, g_rounds)
+        return prog(w0, xs, ys)
+
     def estimate_fisher(self, w, clients: Sequence[int]):
         return self.sim._estimate_fisher(w, clients)
 

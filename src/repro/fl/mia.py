@@ -11,16 +11,24 @@ model scores near the no-information rate.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fl.tasks import resolve_task
+
 
 def _features(predict, models: Dict[int, object], make_batch, xs, ys,
-              task: str, batch: int = 200) -> np.ndarray:
-    """Per-example [nll, max_prob, entropy] under the (ensemble) model."""
+              task, batch: int = 200) -> np.ndarray:
+    """Per-example [nll, max_prob, entropy] under the (ensemble) model.
+
+    The per-example feature shape is delegated to the task registry
+    (``TaskSpec.mia_features``: classification scores each example,
+    generation averages over sequence positions); ``task`` may be a
+    ``TaskSpec`` instance, class, or registered name (``"image"``/``"lm"``
+    still resolve as the deprecated aliases)."""
+    spec = resolve_task(task)
     feats = []
     n = len(xs)
     for i in range(0, n, batch):
@@ -31,27 +39,28 @@ def _features(predict, models: Dict[int, object], make_batch, xs, ys,
             lg = predict(m, make_batch(x, y))
             logits = lg if logits is None else logits + lg
         logits = (logits / len(models)).astype(jnp.float32)
-        if task in ("lm", "generation"):
-            # per-sequence means
-            ll = jax.nn.log_softmax(logits, -1)
-            gold = jnp.take_along_axis(ll, y[..., None], -1)[..., 0]
-            nll = -gold.mean(-1)
-            p = jnp.exp(ll)
-            ent = (-(p * ll).sum(-1)).mean(-1)
-            mx = p.max(-1).mean(-1)
-        else:
-            ll = jax.nn.log_softmax(logits, -1)
-            nll = -jnp.take_along_axis(ll, y[:, None], -1)[:, 0]
-            p = jnp.exp(ll)
-            ent = -(p * ll).sum(-1)
-            mx = p.max(-1)
-        feats.append(np.stack([np.asarray(nll), np.asarray(mx),
-                               np.asarray(ent)], axis=1))
+        feats.append(np.asarray(spec.mia_features(logits, y)))
     return np.concatenate(feats, axis=0)
 
 
+def attack_f1(member_flags: np.ndarray, nonmember_flags: np.ndarray) -> float:
+    """F1 of an attack claiming 'member' on forgotten data, with the false
+    positives measured on an equally sized true non-member split — shared by
+    the threshold attack below and the shadow-model attack in
+    ``repro.verify.shadow``.  ``member_flags``: attack decisions (1 =
+    'member') on the forgotten data; ``nonmember_flags``: decisions on true
+    non-members."""
+    n_eval = len(member_flags)
+    tp = int(np.sum(member_flags))        # forgotten flagged as member
+    fp = int(np.sum(nonmember_flags))     # true non-members flagged as member
+    fn = n_eval - tp
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    return float(2 * prec * rec / max(prec + rec, 1e-9))
+
+
 def _logreg_fit(x: np.ndarray, y: np.ndarray, steps: int = 400,
-                lr: float = 0.5) -> Tuple[np.ndarray, float]:
+                lr: float = 0.5):
     """Tiny logistic regression (numpy GD) with feature standardisation."""
     mu, sd = x.mean(0), x.std(0) + 1e-9
     xs = (x - mu) / sd
@@ -78,7 +87,7 @@ def _logreg_predict(model, x: np.ndarray, threshold: float) -> np.ndarray:
     return (_logreg_score(model, x) > threshold).astype(np.int64)
 
 
-def mia_f1(predict, models: Dict[int, object], make_batch, task: str,
+def mia_f1(predict, models: Dict[int, object], make_batch, task,
            member_data, nonmember_data, forgotten_data) -> float:
     """F1 of the attack detecting *forgotten* examples as members.
 
@@ -97,9 +106,4 @@ def mia_f1(predict, models: Dict[int, object], make_batch, task: str,
     pred_f = _logreg_predict(attack, fx_f[:n_eval], threshold)  # 1 = "member"
     pred_n = _logreg_predict(attack, fx_n[:n_eval], threshold)
     # attack's positive class = member; forgotten data SHOULD be non-member.
-    tp = pred_f.sum()                 # forgotten flagged as member
-    fp = pred_n.sum()                 # true non-members flagged as member
-    fn = n_eval - tp
-    prec = tp / max(tp + fp, 1)
-    rec = tp / max(tp + fn, 1)
-    return float(2 * prec * rec / max(prec + rec, 1e-9))
+    return attack_f1(pred_f, pred_n)

@@ -60,7 +60,7 @@ from __future__ import annotations
 import json
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +142,30 @@ class UnlearnResult:
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 2)
         return json.dumps(self.to_dict(), **kw)
+
+
+@dataclass(frozen=True)
+class PredictInterface:
+    """The simulator's public evaluation surface.
+
+    Everything an external evaluator (the MIA attack, canary probes,
+    benchmarks) needs to score models without reaching into ``FLSimulator``
+    internals: the pure ``predict(model, batch) -> logits`` function, the
+    task's batch constructor, and the ``TaskSpec`` itself (which owns metric
+    and MIA-feature shapes).  Obtained via ``FLSimulator.predict_interface``.
+    """
+    predict: Callable
+    make_batch: Callable
+    task: object                       # the simulator's TaskSpec instance
+
+    def ensemble_logits(self, models: Dict[int, object], x, y):
+        """Mean float32 logits of a model ensemble on one batch."""
+        batch = self.make_batch(jnp.asarray(x), jnp.asarray(y))
+        logits = None
+        for m in models.values():
+            lg = self.predict(m, batch)
+            logits = lg if logits is None else logits + lg
+        return (logits / len(models)).astype(jnp.float32)
 
 
 class FLSimulator:
@@ -316,8 +340,48 @@ class FLSimulator:
         self._stage_programs[key] = prog
         return prog
 
+    def _get_retrain_program(self, epochs: int, g_rounds: int):
+        """Lean whole-stage program for from-scratch retraining (the
+        exact-unlearning oracle, ``repro.verify.oracle``): the stage engine's
+        ``shard_round`` body vmapped over a stacked ``(K, M, n, ...)`` shard
+        batch and scanned over the G rounds, returning ONLY the final
+        ``(K, ...)`` models — round history, update norms, and the store
+        encode are dead outputs XLA eliminates, so the oracle pays exactly
+        one dispatch and no bookkeeping memory."""
+        key = ("retrain", epochs, g_rounds)
+        prog = self._stage_programs.get(key)
+        if prog is not None:
+            return prog
+        shard_round = self._shard_round_fn
+
+        def program(w0, xs, ys):
+            k = xs.shape[0]
+            ws0 = jax.tree.map(
+                lambda a: jnp.broadcast_to(a.astype(jnp.float32),
+                                           (k,) + a.shape), w0)
+
+            def body(ws, _):
+                new_ws, _out, _norms = jax.vmap(
+                    lambda p, x, y: shard_round(p, x, y, epochs, "stacked")
+                )(ws, xs, ys)
+                return new_ws, None
+
+            final, _ = jax.lax.scan(body, ws0, None, length=g_rounds)
+            return final
+
+        prog = jax.jit(program)
+        self._stage_programs[key] = prog
+        return prog
+
     def _make_batch(self, x, y):
         return self.task_spec.make_batch(x, y)
+
+    def predict_interface(self) -> PredictInterface:
+        """Public evaluation surface (see ``PredictInterface``) — the stable
+        API benchmarks and the verification suite evaluate through, instead
+        of the private ``_pf`` / ``_make_batch`` attributes."""
+        return PredictInterface(self._pf, self.task_spec.make_batch,
+                                self.task_spec)
 
     def _stack_client_data(self, clients: Sequence[int]):
         n_min = min(self.client_data[c][0].shape[0] for c in clients)

@@ -16,6 +16,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Tuple, Type
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import lm_examples, make_char_data, make_image_data
@@ -53,6 +55,24 @@ class TaskSpec:
     def eval_metrics(self, correct: int, loss: float,
                      total: int) -> Dict[str, float]:
         return {"acc": correct / max(total, 1), "loss": loss / max(total, 1)}
+
+    # --------------------------------------------- forgetting-verification
+    def mia_features(self, logits, y):
+        """Per-example membership features ``[nll, max_prob, entropy]`` from
+        the (already ensemble-averaged) float32 logits — the attack-feature
+        shape is task-owned (classification scores each example; generation
+        averages over sequence positions).  Returns an ``(n, 3)`` array
+        consumed by ``repro.fl.mia`` and the shadow attack in
+        ``repro.verify``."""
+        raise NotImplementedError
+
+    def make_canaries(self, model_cfg, like_x, like_y, n: int, seed: int):
+        """``n`` seeded memorization-only canary examples, shaped and dtyped
+        like the ``(like_x, like_y)`` exemplars: inputs off the task's data
+        manifold mapped to random targets, so a model can only score above
+        the chance rate by having memorized them (``repro.verify.canary``).
+        Returns ``(xs, ys, chance_rate)``."""
+        raise NotImplementedError
 
 
 TASKS: Dict[str, Type[TaskSpec]] = {}
@@ -134,6 +154,20 @@ class ClassificationTask(TaskSpec):
     def labels_per_example(self, y_shape) -> int:
         return 1
 
+    def mia_features(self, logits, y):
+        ll = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(ll, y[:, None], -1)[:, 0]
+        p = jnp.exp(ll)
+        return jnp.stack([nll, p.max(-1), -(p * ll).sum(-1)], axis=1)
+
+    def make_canaries(self, model_cfg, like_x, like_y, n: int, seed: int):
+        # high-contrast binary noise images: maximally off the smooth
+        # class-prototype manifold, random labels -> chance = 1/num_classes
+        rng = np.random.default_rng(seed)
+        xs = rng.integers(0, 2, (n,) + like_x.shape[1:]).astype(like_x.dtype)
+        ys = rng.integers(0, model_cfg.num_classes, n).astype(like_y.dtype)
+        return xs, ys, 1.0 / model_cfg.num_classes
+
 
 @register_task("generation", "lm")
 class GenerationTask(TaskSpec):
@@ -171,3 +205,20 @@ class GenerationTask(TaskSpec):
         return {"acc": correct / max(total, 1), "loss": nll,
                 "ppl": float(math.exp(min(nll, 30.0))),
                 "bpc": nll / math.log(2.0)}
+
+    def mia_features(self, logits, y):
+        # per-sequence means over the position axis
+        ll = jax.nn.log_softmax(logits, -1)
+        gold = jnp.take_along_axis(ll, y[..., None], -1)[..., 0]
+        p = jnp.exp(ll)
+        return jnp.stack([-gold.mean(-1), p.max(-1).mean(-1),
+                          (-(p * ll).sum(-1)).mean(-1)], axis=1)
+
+    def make_canaries(self, model_cfg, like_x, like_y, n: int, seed: int):
+        # random token sequences mapped to random (NOT next-token) targets:
+        # no n-gram structure to generalize from, chance = 1/vocab
+        rng = np.random.default_rng(seed)
+        v = model_cfg.vocab_size
+        xs = rng.integers(0, v, (n,) + like_x.shape[1:]).astype(like_x.dtype)
+        ys = rng.integers(0, v, (n,) + like_y.shape[1:]).astype(like_y.dtype)
+        return xs, ys, 1.0 / v
