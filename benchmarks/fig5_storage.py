@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from benchmarks.common import (Scale, build_image_session, collect_report,
                                emit)
-from repro.checkpoint.store import tree_bytes
+from repro.stores.store import tree_bytes
 from repro.core import theory
 from repro.core.sharding import adaptive_requests
 from repro.fl.experiment import UnlearnRequest

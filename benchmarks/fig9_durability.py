@@ -1,0 +1,117 @@
+"""Fig. 9 (beyond the paper): durability — checkpoint overhead and
+snapshot throughput.
+
+Runs the same multi-stage session with interleaved unlearning requests
+under three checkpoint cadences — ``off`` (no durability), ``every2``
+(snapshot every other stage), and ``every1`` (snapshot per stage, the
+crash-recovery default) — and measures what the write-ahead journal plus
+snapshot commits cost relative to the bare run.  A second pass
+microbenchmarks the snapshot path itself: ``save_snapshot`` /
+``load_snapshot`` throughput on the captured session state (coded bf16
+slices included) and the end-to-end resume (newest-good snapshot ->
+restored session).  Emitted as ``BENCH_fig9.json`` through the standard
+``--json-dir`` flow.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import Scale, build_image_session, collect_report, emit
+from repro.durability import CheckpointManager, load_snapshot, save_snapshot
+from repro.durability.session_state import capture_session, restore_session
+from repro.fl.experiment import RequestSchedule, UnlearnRequest
+
+SAVE_REPS = 3
+
+
+def _schedule(num_stages: int) -> RequestSchedule:
+    return RequestSchedule([
+        UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                       after_stage=k, rounds=1)
+        for k in range(num_stages)])
+
+
+def _dir_bytes(path: str) -> int:
+    return sum(os.path.getsize(os.path.join(path, f))
+               for f in os.listdir(path))
+
+
+def run(sc: Scale, num_stages: int = 2):
+    tmp = tempfile.mkdtemp(prefix="fig9-durability-")
+    summary = {"num_stages": num_stages, "cadences": {}}
+    try:
+        # warm-up run: pay the train/unlearn JIT compiles once so the
+        # cadence walls compare checkpointing cost, not compile order
+        warm, _test = build_image_session(sc, iid=True)
+        warm.run(num_stages, schedule=_schedule(num_stages))
+        base_wall = None
+        last_ckpt = None
+        for label, every in (("off", 0), ("every2", 2), ("every1", 1)):
+            ckpt = os.path.join(tmp, label)
+            session, _test = build_image_session(
+                sc, iid=True,
+                checkpoint_every=every,
+                checkpoint_dir=ckpt if every else None)
+            t0 = time.perf_counter()
+            session.run(num_stages, schedule=_schedule(num_stages))
+            wall = time.perf_counter() - t0
+            if base_wall is None:
+                base_wall = wall
+            snaps = session.checkpointer.steps() if every else []
+            disk = _dir_bytes(ckpt) if every else 0
+            overhead = wall / base_wall - 1.0 if base_wall else 0.0
+            emit(f"fig9_durability_{label}", wall * 1e6,
+                 f"stages={num_stages};snapshots={len(snaps)};"
+                 f"disk_bytes={disk};overhead_vs_off={overhead:.3f}")
+            summary["cadences"][label] = {
+                "checkpoint_every": every, "wall_s": wall,
+                "snapshots": len(snaps), "disk_bytes": disk,
+                "overhead_vs_off": overhead,
+            }
+            if every == 1:
+                last_ckpt = ckpt
+
+        # ---- snapshot write/restore throughput on the captured state ----
+        session, _test = build_image_session(sc, iid=True)
+        session.run(num_stages, schedule=_schedule(num_stages))
+        state = capture_session(session)
+        spath = os.path.join(tmp, "micro.ckpt")
+        nbytes = save_snapshot(spath, state)           # warm-up + size
+        t0 = time.perf_counter()
+        for _ in range(SAVE_REPS):
+            save_snapshot(spath, state)
+        save_us = (time.perf_counter() - t0) / SAVE_REPS * 1e6
+        t0 = time.perf_counter()
+        for _ in range(SAVE_REPS):
+            load_snapshot(spath)
+        load_us = (time.perf_counter() - t0) / SAVE_REPS * 1e6
+        save_mbs = nbytes / (save_us / 1e6) / 1e6
+        load_mbs = nbytes / (load_us / 1e6) / 1e6
+        emit("fig9_snapshot_save", save_us,
+             f"bytes={nbytes};throughput_mb_s={save_mbs:.1f}")
+        emit("fig9_snapshot_load", load_us,
+             f"bytes={nbytes};throughput_mb_s={load_mbs:.1f}")
+
+        # ---- end-to-end resume: newest good snapshot -> live session ----
+        fresh, _test = build_image_session(sc, iid=True)
+        t0 = time.perf_counter()
+        got = CheckpointManager(last_ckpt).load_latest()
+        restore_session(fresh, got[0])
+        resume_us = (time.perf_counter() - t0) * 1e6
+        emit("fig9_resume_restore", resume_us,
+             f"from_step={got[1]};stages_restored={len(fresh.records)}")
+        summary["snapshot"] = {
+            "bytes": nbytes, "save_us": save_us, "load_us": load_us,
+            "save_mb_s": save_mbs, "load_mb_s": load_mbs,
+            "resume_us": resume_us,
+        }
+        collect_report("fig9_durability", summary)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(Scale())

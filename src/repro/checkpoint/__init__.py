@@ -1,4 +1,23 @@
-from repro.checkpoint.store import (CodedStore, FullStore,  # noqa: F401
-                                    ParameterStore, RoundPayload, STORES,
-                                    StoreStats, UncodedShardStore, make_store,
-                                    register_store, tree_bytes)
+"""Deprecated alias for :mod:`repro.stores`.
+
+``repro.checkpoint`` always held the paper's *parameter stores* (full /
+uncoded / coded), not training checkpoints — the name now belongs to the
+real crash-recovery machinery in :mod:`repro.durability`. This shim keeps
+old imports working; the re-exported objects are the exact same classes as
+``repro.stores`` (identity, not copies), so registries and isinstance
+checks are unaffected.
+"""
+import warnings
+
+warnings.warn(
+    "repro.checkpoint is deprecated; it holds parameter stores, not "
+    "checkpoints — import repro.stores instead (crash-recovery "
+    "checkpointing lives in repro.durability)",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from repro.stores.store import (CodedStore, FullStore,  # noqa: F401,E402
+                                ParameterStore, RoundPayload, STORES,
+                                StoreStats, UncodedShardStore, make_store,
+                                register_store, tree_bytes)

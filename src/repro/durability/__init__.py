@@ -1,0 +1,35 @@
+"""Crash-consistent durability: snapshots, write-ahead journal, recovery.
+
+* ``snapshot``     — versioned, checksummed snapshot format for pytrees +
+  store state (coded slices incl. bf16, coding keys, ``StoreStats``) with
+  atomic rename-commit.
+* ``journal``      — append-only, per-record-checksummed write-ahead log
+  of session events (stage completions, request dispatch/commit).
+* ``checkpointer`` — ``CheckpointManager``: snapshot rotation with
+  corrupt-snapshot fallback, paired with the journal.
+* ``session_state`` — capture/restore of ``FederatedSession`` state (the
+  resume path; imported lazily to avoid a cycle with the session module).
+
+Wired through ``FederatedSession(checkpoint_every=, checkpoint_dir=)`` /
+``ScenarioConfig`` and ``UnlearningService(journal=)``; crash injection
+lives in ``repro.faults`` (``process_kill`` / ``torn_write``).
+"""
+from repro.durability.checkpointer import CheckpointManager
+from repro.durability.journal import Journal, replay
+from repro.durability.snapshot import (SnapshotCorruption, load_snapshot,
+                                       save_snapshot)
+
+__all__ = [
+    "CheckpointManager", "Journal", "replay",
+    "SnapshotCorruption", "load_snapshot", "save_snapshot",
+    "capture_session", "restore_session",
+]
+
+
+def __getattr__(name):
+    # session_state pulls in repro.fl.experiment.session; load lazily so
+    # importing repro.durability from the session module itself is cycle-free
+    if name in ("capture_session", "restore_session"):
+        from repro.durability import session_state
+        return getattr(session_state, name)
+    raise AttributeError(name)

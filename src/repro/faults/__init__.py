@@ -6,14 +6,15 @@ firing and every downstream recovery decision lands in a ``FaultLedger``
 whose ``signature()`` is reproducible bit-for-bit from the plan seed.
 """
 from repro.faults.events import (DegradedModeEvent, DeviceFault, FaultError,
-                                 FaultEvent, FaultLedger, JobHang,
-                                 RecoveryEvent, TransientJobError)
+                                 FaultEvent, FaultLedger, InjectedCrash,
+                                 JobHang, RecoveryEvent, TransientJobError)
 from repro.faults.plan import (INJECTORS, FaultInjector, FaultPlan,
                                chaos_plan, make_injector, register_injector)
 
 __all__ = [
     "DegradedModeEvent", "DeviceFault", "FaultError", "FaultEvent",
-    "FaultLedger", "JobHang", "RecoveryEvent", "TransientJobError",
+    "FaultLedger", "InjectedCrash", "JobHang", "RecoveryEvent",
+    "TransientJobError",
     "INJECTORS", "FaultInjector", "FaultPlan", "chaos_plan",
     "make_injector", "register_injector",
 ]

@@ -56,6 +56,17 @@ class TransientJobError(FaultError):
         super().__init__(f"transient failure in job {key!r}")
 
 
+class InjectedCrash(FaultError):
+    """An injected process crash (the ``process_kill`` injector's in-process
+    ``mode="raise"`` form): the session dies at a named crash site, leaving
+    only its snapshots + journal behind.  Recovery is a *restart* —
+    ``FederatedSession.run(resume_from=...)`` — not a retry."""
+
+    def __init__(self, site):
+        self.site = tuple(site)
+        super().__init__(f"injected process crash at {self.site!r}")
+
+
 # ---------------------------------------------------------------------------
 # Structured events
 # ---------------------------------------------------------------------------

@@ -72,6 +72,16 @@ class FaultInjector:
         """(delay_s, error-or-None) for one job attempt, or ``None``."""
         return None
 
+    def crash(self, plan: "FaultPlan", site: Tuple) -> None:
+        """Process-crash hook: fired at the session's named crash sites
+        (``("session", phase, stage)``); may raise ``InjectedCrash`` or
+        kill the process outright."""
+
+    def snapshot_written(self, plan: "FaultPlan", path: str,
+                         step: int) -> None:
+        """Durability hook: fired right after a snapshot commit — the
+        torn-write injector corrupts the file here."""
+
     def describe(self) -> dict:
         return {"injector": self.name}
 
@@ -184,6 +194,18 @@ class FaultPlan:
                 inj.name, site=("job",) + tuple(key) + (attempt,),
                 detail=(round(d, 9), type(e).__name__ if e else "")))
         return delay, err
+
+    def crash_site(self, site: Tuple) -> None:
+        """Fire every injector's process-crash hook at one named site (the
+        session calls this after stage training, after request serving, and
+        after a snapshot commit)."""
+        for inj in self.injectors:
+            inj.crash(self, site)
+
+    def post_snapshot(self, path: str, step: int) -> None:
+        """Fire every injector's snapshot-written hook (torn-write site)."""
+        for inj in self.injectors:
+            inj.snapshot_written(self, path, step)
 
     def describe(self) -> dict:
         return {"seed": self.seed,
@@ -397,6 +419,96 @@ class TransientJobException(FaultInjector):
     def describe(self):
         return {"injector": self.name, "rate": self.rate,
                 "fail_attempts": self.fail_attempts}
+
+
+@register_injector("process_kill")
+class ProcessKill(FaultInjector):
+    """Kill the process at one named session crash site — the crash half of
+    the durability acceptance test.
+
+    Sites are ``("session", phase, stage)`` with ``phase`` one of
+    ``after_stage`` (training done, nothing served or snapshotted),
+    ``after_requests`` (requests served, snapshot not yet written), and
+    ``after_snapshot`` (snapshot committed, stage not yet journal-marked).
+
+    ``mode="exit"`` is the real thing — ``os._exit(exit_code)``, no atexit,
+    no flushes, for the subprocess kill test.  ``mode="raise"`` throws the
+    typed ``InjectedCrash`` instead, so in-process tests can simulate the
+    crash and then resume from the snapshots the dead session left behind.
+    Fires at most once per plan (a resumed run must pass a fresh plan or
+    none at all — a durable restart does not replay the crash)."""
+
+    def __init__(self, stage: int = 0, phase: str = "after_stage",
+                 mode: str = "raise", exit_code: int = 137):
+        phases = ("after_stage", "after_requests", "after_snapshot")
+        if phase not in phases:
+            raise ValueError(f"phase must be one of {phases}, got {phase!r}")
+        if mode not in ("exit", "raise"):
+            raise ValueError(f"mode must be 'exit' or 'raise', got {mode!r}")
+        self.stage = int(stage)
+        self.phase = phase
+        self.mode = mode
+        self.exit_code = int(exit_code)
+        self.fired = False
+
+    def crash(self, plan, site):
+        if self.fired or len(site) != 3:
+            return
+        kind, phase, stage = site
+        if kind != "session" or phase != self.phase or stage != self.stage:
+            return
+        self.fired = True
+        plan.ledger.record(FaultEvent("process_kill", site=tuple(site),
+                                      detail=(self.mode,)))
+        if self.mode == "raise":
+            from repro.faults.events import InjectedCrash
+            raise InjectedCrash(site)
+        import os
+        os._exit(self.exit_code)
+
+    def describe(self):
+        return {"injector": self.name, "stage": self.stage,
+                "phase": self.phase, "mode": self.mode,
+                "exit_code": self.exit_code}
+
+
+@register_injector("torn_write")
+class TornWrite(FaultInjector):
+    """Corrupt a just-committed snapshot — a torn write the checksum layer
+    must catch.  ``flip=False`` (default) truncates the file to ``frac`` of
+    its bytes (power loss mid-write-back); ``flip=True`` XOR-flips a byte
+    run in place (media corruption).  Targets the snapshot at ``step``;
+    recovery must fall back to the previous good snapshot."""
+
+    def __init__(self, step: int = 0, frac: float = 0.5, flip: bool = False):
+        if not 0.0 <= frac < 1.0:
+            raise ValueError("frac must be in [0, 1)")
+        self.step = int(step)
+        self.frac = float(frac)
+        self.flip = bool(flip)
+
+    def snapshot_written(self, plan, path, step):
+        if step != self.step:
+            return
+        import os
+        size = os.path.getsize(path)
+        if self.flip:
+            with open(path, "r+b") as f:
+                f.seek(size // 2)
+                chunk = f.read(min(16, size - size // 2))
+                f.seek(size // 2)
+                f.write(bytes(b ^ 0xFF for b in chunk))
+            detail = ("flip", size)
+        else:
+            with open(path, "r+b") as f:
+                f.truncate(int(size * self.frac))
+            detail = ("truncate", size, int(size * self.frac))
+        plan.ledger.record(FaultEvent("torn_write",
+                                      site=("snapshot", step), detail=detail))
+
+    def describe(self):
+        return {"injector": self.name, "step": self.step,
+                "frac": self.frac, "flip": self.flip}
 
 
 def chaos_plan(seed: int = 0, *, corrupt: int = 0, erase: int = 0,

@@ -3,7 +3,7 @@
 Six registries/drivers make new scenarios drop-in plugins instead of
 simulator surgery:
 
-* ``STORES`` (``repro.checkpoint.store``) — parameter stores behind one
+* ``STORES`` (``repro.stores.store``) — parameter stores behind one
   ``put_round(RoundPayload)`` protocol (``full`` / ``uncoded`` / ``coded``).
 * ``FRAMEWORKS`` — unlearning strategies (``SE`` / ``FE`` / ``FR`` / ``RR``)
   as ``@register_framework`` classes receiving an ``UnlearnContext``.
@@ -18,7 +18,7 @@ simulator surgery:
   of unlearning requests across isolated stages, with ``run_scenario``
   turning one ``ScenarioConfig`` into a ``SessionReport``.
 """
-from repro.checkpoint.store import (ParameterStore, RoundPayload,  # noqa: F401
+from repro.stores.store import (ParameterStore, RoundPayload,  # noqa: F401
                                     STORES, StoreStats, make_store,
                                     register_store)
 from repro.data.federated import (PARTITIONERS,  # noqa: F401

@@ -19,13 +19,14 @@ spellings — ``task="image" | "lm"`` and ``iid=True/False`` — keep working as
 """
 from __future__ import annotations
 
+import os
 import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.checkpoint.store import STORES
+from repro.stores.store import STORES
 from repro.configs import FLConfig, OptimizerConfig
 from repro.data.federated import get_partitioner
 from repro.fl.experiment.frameworks import FRAMEWORKS
@@ -76,6 +77,10 @@ class ScenarioConfig:
     schedule: Optional[RequestSchedule] = None
     batch_requests: bool = False         # merge requests due after each stage
     strict_schedule: bool = False        # raise on never-served requests
+    # durability (repro.durability): snapshot every N completed stages into
+    # checkpoint_dir; 0 disables periodic snapshots (a dir alone implies 1)
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
 
     # ------------------------------------------------------------ validation
     def __post_init__(self):
@@ -124,6 +129,24 @@ class ScenarioConfig:
                 raise ValueError(
                     f"slice_dtype {self.slice_dtype!r} is not a dtype; use "
                     f"e.g. 'bfloat16', 'float32', or np.float16") from None
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every={self.checkpoint_every} must be >= 0 "
+                f"(0 disables periodic snapshots)")
+        if self.checkpoint_every and not self.checkpoint_dir:
+            raise ValueError(
+                f"checkpoint_every={self.checkpoint_every} needs a "
+                f"checkpoint_dir to write snapshots to")
+        if self.checkpoint_dir is not None:
+            parent = os.path.dirname(
+                os.path.abspath(self.checkpoint_dir)) or os.sep
+            probe = self.checkpoint_dir if os.path.isdir(self.checkpoint_dir) \
+                else parent
+            if not os.path.isdir(probe) or not os.access(probe, os.W_OK):
+                raise ValueError(
+                    f"checkpoint_dir {self.checkpoint_dir!r} is not writable "
+                    f"(nor creatable under {parent!r}); snapshots need a "
+                    f"writable directory")
 
     def _apply_deprecated_spellings(self):
         if self.task in _TASK_ALIASES:
@@ -193,7 +216,9 @@ def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:
                                encode_group=cfg.encode_group,
                                slice_dtype=cfg.slice_dtype,
                                batch_requests=cfg.batch_requests,
-                               strict_schedule=cfg.strict_schedule)
+                               strict_schedule=cfg.strict_schedule,
+                               checkpoint_every=cfg.checkpoint_every,
+                               checkpoint_dir=cfg.checkpoint_dir)
     return session, test
 
 

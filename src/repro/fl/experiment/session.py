@@ -18,12 +18,13 @@ retraining cost, and the unlearning results accumulate into a
 from __future__ import annotations
 
 import json
+import os
 import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Union
 
-from repro.checkpoint.store import StoreStats
+from repro.stores.store import StoreStats
 from repro.fl.experiment.frameworks import run_unlearn
 from repro.fl.experiment.stage import train_stage
 
@@ -45,6 +46,9 @@ class UnlearnRequest:
     (comparison semantics, the default — matches the seed ``unlearn``).
     Requires a shard-level framework (e.g. SE) — federation-level results
     ({0: w}) cannot replace per-shard models and raise ``ValueError``.
+    ``request_id``: stable idempotency key.  Scheduled requests without one
+    get a deterministic id (``req-s<stage>-<i>``) when they come due, so
+    journal replay and report entries key on ids, never list positions.
     """
     clients: ClientSpec
     framework: str = "SE"
@@ -52,6 +56,7 @@ class UnlearnRequest:
     stages: Optional[Sequence[int]] = None
     rounds: Optional[int] = None
     apply: bool = False
+    request_id: str = ""
 
     def resolve_clients(self, plan) -> List[int]:
         cs = self.clients(plan) if callable(self.clients) else self.clients
@@ -149,7 +154,17 @@ class FederatedSession:
     def __init__(self, sim, store_kind: str = "coded", engine: str = "fused",
                  encode_group: Optional[int] = None, slice_dtype=None,
                  rounds: Optional[int] = None, batch_requests: bool = False,
-                 strict_schedule: bool = False, faults=None):
+                 strict_schedule: bool = False, faults=None,
+                 checkpoint_every: int = 0,
+                 checkpoint_dir: Optional[str] = None):
+        if checkpoint_every and not checkpoint_dir:
+            raise ValueError(
+                f"checkpoint_every={checkpoint_every} needs a "
+                f"checkpoint_dir to write snapshots to")
+        if checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0 (0 disables periodic "
+                f"snapshots), got {checkpoint_every}")
         self.sim = sim
         self.store_kind = store_kind
         self.engine = engine
@@ -161,6 +176,17 @@ class FederatedSession:
         self.faults = faults                     # optional FaultPlan
         self.records: List[object] = []          # StageRecord per stage
         self.report = SessionReport(store_kind=store_kind)
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpointer = None
+        if checkpoint_dir is not None:
+            from repro.durability.checkpointer import CheckpointManager
+            self.checkpointer = CheckpointManager(checkpoint_dir,
+                                                  faults=faults)
+            if not self.checkpoint_every:
+                self.checkpoint_every = 1        # dir given: snapshot per stage
+        self._served: set = set()                # committed request ids
+        self.last_resume_info: Optional[dict] = None
 
     # ---------------------------------------------------------------- stages
     def run_stage(self, rounds: Optional[int] = None):
@@ -241,6 +267,7 @@ class FederatedSession:
             res = run_unlearn(self.sim, request.framework, self.records[i],
                               stage_clients,
                               rounds=request.rounds or self.rounds)
+            res.request_id = request.request_id
             results.append(self.record_result(i, res, apply=request.apply))
         return results
 
@@ -262,6 +289,7 @@ class FederatedSession:
             raise RuntimeError("no completed stages to unlearn from")
         plan = self.records[-1].plan
         groups: dict = {}
+        group_ids: dict = {}
         for r in requests:
             key = (r.framework, r.rounds,
                    tuple(r.stages) if r.stages is not None else None, r.apply)
@@ -269,37 +297,141 @@ class FederatedSession:
             for c in r.resolve_clients(plan):
                 if c not in clients:
                     clients.append(c)
+            if r.request_id:
+                group_ids.setdefault(key, []).append(r.request_id)
         results = []
         for (fw, rounds, stages, apply), clients in groups.items():
             merged = UnlearnRequest(clients, framework=fw, rounds=rounds,
                                     stages=list(stages) if stages else None,
-                                    apply=apply)
+                                    apply=apply,
+                                    request_id="+".join(group_ids.get(
+                                        (fw, rounds, stages, apply), [])))
             results.extend(self.unlearn(merged))
         return results
 
+    # ------------------------------------------------------------ durability
+    def _journal(self, event: dict) -> None:
+        if self.checkpointer is not None:
+            self.checkpointer.journal.append(event)
+
+    def _crash_site(self, phase: str, stage: int) -> None:
+        """Named process-crash site for the chaos harness (``process_kill``
+        fires here; a plan without crash injectors is a no-op)."""
+        if self.faults is not None and hasattr(self.faults, "crash_site"):
+            self.faults.crash_site(("session", phase, stage))
+
+    def _maybe_checkpoint(self, k: int, num_stages: int) -> None:
+        if self.checkpointer is None or self.checkpoint_every <= 0:
+            return
+        if (k + 1) % self.checkpoint_every == 0 or k == num_stages - 1:
+            from repro.durability import session_state
+            path = self.checkpointer.save(
+                session_state.capture_session(self), step=k)
+            self._journal({"ev": "snapshot", "step": k,
+                           "path": os.path.basename(path)})
+            self._crash_site("after_snapshot", k)
+
+    def resume(self, resume_from: str) -> int:
+        """Restore from the newest good snapshot under ``resume_from`` and
+        replay its journal.  Returns the first stage index still to run.
+
+        Corrupt snapshots (torn writes) are skipped — recovery falls back
+        to the previous good one.  Requests the journal shows dispatched
+        but never committed re-dispatch exactly once: the restored report
+        does not contain them, and re-serving from the restored RNG state
+        reproduces the uninterrupted run bit-for-bit."""
+        from repro.durability import session_state
+        from repro.durability.checkpointer import CheckpointManager
+        mgr = self.checkpointer
+        if mgr is None or os.path.abspath(mgr.directory) != \
+                os.path.abspath(resume_from):
+            mgr = CheckpointManager(resume_from, faults=self.faults)
+        got = mgr.load_latest()
+        if got is None:
+            raise FileNotFoundError(
+                f"no usable snapshot under {resume_from!r}"
+                + (f" ({len(mgr.skipped)} corrupt snapshot(s) skipped: "
+                   f"{mgr.skipped})" if mgr.skipped else ""))
+        state, step, path = got
+        start = session_state.restore_session(self, state)
+        if self.checkpointer is None:
+            self.checkpointer = mgr
+        # exactly-once accounting: ids dispatched but never committed in the
+        # journal are re-dispatched by the resumed run (they are absent from
+        # the restored report); committed ids at/before the snapshot are in
+        # ``self._served`` and are never served twice
+        dispatched: list = []
+        committed: set = set()
+        for ev in mgr.journal.events():
+            if ev.get("ev") == "req_dispatch":
+                dispatched.extend(ev.get("rids", []))
+            elif ev.get("ev") == "req_commit":
+                committed.update(ev.get("rids", []))
+        inflight = sorted(set(dispatched) - committed - self._served)
+        self.last_resume_info = {
+            "step": step, "path": path, "start_stage": start,
+            "skipped_snapshots": list(mgr.skipped), "inflight": inflight,
+        }
+        self._journal({"ev": "resume", "from_step": step, "start": start,
+                       "skipped": [os.path.basename(p) for p in mgr.skipped],
+                       "inflight": inflight})
+        return start
+
     # ------------------------------------------------------------------- run
     def run(self, num_stages: int,
-            schedule: Optional[RequestSchedule] = None) -> SessionReport:
+            schedule: Optional[RequestSchedule] = None,
+            resume_from: Optional[str] = None) -> SessionReport:
         """K stages back-to-back; after stage k, serve every scheduled
         request with ``after_stage == k`` — one by one, or merged per batch
         when the session was built with ``batch_requests=True``.
+
+        With ``checkpoint_dir``/``checkpoint_every`` set, a snapshot is
+        committed every ``checkpoint_every`` completed stages (and after
+        the last), and every stage completion / request dispatch / request
+        commit is journaled first.  ``resume_from=<dir>`` restores the
+        newest good snapshot and continues: completed stages are skipped,
+        served requests (by ``request_id``) are never re-applied, and the
+        resumed run's models, slices, and accounting are bit-identical to
+        an uninterrupted run.
 
         A request whose ``after_stage`` falls outside ``[0, num_stages)``
         can never come due and would previously vanish without a trace;
         the run now warns about such unserved requests (or raises, when the
         session was built with ``strict_schedule=True``)."""
-        for k in range(num_stages):
+        start = 0
+        if resume_from is not None:
+            start = self.resume(resume_from)
+        for k in range(start, num_stages):
+            self._journal({"ev": "stage_begin", "stage": k})
             self.run_stage()
-            if schedule is None:
-                continue
-            due = schedule.due(k)
-            if not due:
-                continue
-            if self.batch_requests:
-                self.unlearn_batch(due)
-            else:
-                for req in due:
-                    self.unlearn(req)
+            self._crash_site("after_stage", k)
+            due = schedule.due(k) if schedule is not None else []
+            for i, req in enumerate(due):
+                if not req.request_id:
+                    req.request_id = f"req-s{k}-{i}"
+            due = [r for r in due if r.request_id not in self._served]
+            if due:
+                rids = [r.request_id for r in due]
+                if self.batch_requests:
+                    self._journal({"ev": "req_dispatch", "rids": rids,
+                                   "stage_after": k})
+                    self.unlearn_batch(due)
+                    self._served.update(rids)
+                    self._journal({"ev": "req_commit", "rids": rids,
+                                   "stage_after": k})
+                else:
+                    for req in due:
+                        self._journal({"ev": "req_dispatch",
+                                       "rids": [req.request_id],
+                                       "stage_after": k})
+                        self.unlearn(req)
+                        self._served.add(req.request_id)
+                        self._journal({"ev": "req_commit",
+                                       "rids": [req.request_id],
+                                       "stage_after": k})
+            self._crash_site("after_requests", k)
+            self._maybe_checkpoint(k, num_stages)
+            self._journal({"ev": "stage_commit", "stage": k})
         if schedule is not None:
             missed = [r for r in schedule.requests
                       if not 0 <= r.after_stage < num_stages]

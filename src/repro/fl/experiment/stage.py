@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.store import RoundPayload
+from repro.stores.store import RoundPayload
 from repro.core import coding, unlearning
 from repro.models import init_params
 

@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.store import StoreStats, make_store
+from repro.stores.store import StoreStats, make_store
 from repro.configs.base import FLConfig, ModelConfig, OptimizerConfig
 from repro.core import coding, unlearning
 from repro.core.sharding import ShardManager, StagePlan
@@ -126,10 +126,12 @@ class UnlearnResult:
     cost_units: float                # client-epochs of retraining
     store_stats: Optional[StoreStats]
     impacted_shards: Sequence[int]
+    request_id: str = ""             # stable id of the request that produced it
 
     def to_dict(self) -> dict:
         """Machine-readable summary (models excluded — they are pytrees)."""
         return {
+            "request_id": self.request_id,
             "framework": self.framework,
             "wall_time_s": self.wall_time,
             "cost_units": self.cost_units,

@@ -28,4 +28,4 @@ from repro.service.policy import (POLICIES, BatchWindowPolicy,  # noqa: F401
 from repro.service.workload import (ServiceRequest, VirtualClock,  # noqa: F401
                                     bursty_trace, client_sampler, load_trace,
                                     poisson_trace, save_trace,
-                                    sequenced_trace)
+                                    sequenced_trace, service_request_id)

@@ -54,7 +54,8 @@ from repro.fl.experiment.session import UnlearnRequest
 from repro.fl.simulator import UnlearnResult
 from repro.service.placement import DevicePlacement
 from repro.service.policy import Pending, SchedulingPolicy, make_policy
-from repro.service.workload import ServiceRequest, VirtualClock
+from repro.service.workload import (ServiceRequest, VirtualClock,
+                                    service_request_id)
 
 
 @dataclass(frozen=True)
@@ -121,9 +122,11 @@ class LedgerEntry:
     job_attempts: int = 0             # total attempts across this serve's jobs
     job_retries: int = 0              # attempts beyond the first
     aborted: bool = False             # some job exhausted its retry budget
+    request_id: str = ""              # stable idempotency key (svc-<rid> fallback)
 
     def to_dict(self) -> dict:
         return {
+            "request_id": self.request_id or f"svc-{self.rid}",
             "rid": self.rid, "arrival_s": self.arrival,
             "clients": list(self.clients), "framework": self.framework,
             "batch_id": self.batch_id, "queue_wait_s": self.queue_wait,
@@ -135,6 +138,27 @@ class LedgerEntry:
             "sla_met": self.sla_met, "job_attempts": self.job_attempts,
             "job_retries": self.job_retries, "aborted": self.aborted,
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LedgerEntry":
+        """Inverse of ``to_dict`` — journal replay rebuilds committed
+        entries bit-identically from their ``svc_commit`` payloads."""
+        return cls(
+            rid=int(d["rid"]), arrival=float(d["arrival_s"]),
+            clients=tuple(int(c) for c in d["clients"]),
+            framework=d["framework"], batch_id=int(d["batch_id"]),
+            queue_wait=float(d["queue_wait_s"]),
+            batch_wait=float(d["batch_wait_s"]),
+            retrain_wall=float(d["retrain_wall_s"]),
+            latency=float(d["latency_s"]), n_jobs=int(d["n_jobs"]),
+            devices=[int(x) for x in d["devices"]],
+            impacted=[tuple(p) for p in d["impacted"]],
+            cost_units=float(d["cost_units"]),
+            deadline=d["deadline_s"], sla_met=d["sla_met"],
+            job_attempts=int(d["job_attempts"]),
+            job_retries=int(d["job_retries"]),
+            aborted=bool(d["aborted"]),
+            request_id=str(d.get("request_id", "")))
 
 
 @dataclass
@@ -218,7 +242,10 @@ class ServiceReport:
             "latency_p99_s": self.p99,
             "sla_hit_rate": self.sla_hit_rate,
             "faults": self.faults,
-            "requests": [e.to_dict() for e in self.entries],
+            # keyed on the stable request_id, not list position, so journal
+            # replay / resumed serves merge into an identical report
+            "requests": {(e.request_id or f"svc-{e.rid}"): e.to_dict()
+                         for e in self.entries},
         }
 
     def to_json(self, **kw) -> str:
@@ -266,7 +293,8 @@ class UnlearningService:
     def __init__(self, session, policy="fifo",
                  policy_opts: Optional[dict] = None,
                  placement: Optional[DevicePlacement] = None,
-                 faults=None, retry: Optional[RetryPolicy] = None):
+                 faults=None, retry: Optional[RetryPolicy] = None,
+                 journal=None):
         self.session = session
         self.policy: SchedulingPolicy = (
             make_policy(policy, **(policy_opts or {}))
@@ -274,6 +302,15 @@ class UnlearningService:
         self.placement = placement or DevicePlacement()
         self.faults = faults                      # optional FaultPlan
         self.retry = retry or RetryPolicy()
+        # optional repro.durability.Journal: svc_dispatch before any retrain
+        # work, svc_commit (with the full ledger entry) after — a crash in
+        # between leaves the id dispatched-but-uncommitted, and
+        # serve(resume=True) re-dispatches it exactly once
+        self.journal = journal
+
+    def _journal(self, event: dict) -> None:
+        if self.journal is not None:
+            self.journal.append(event)
 
     # ------------------------------------------------------------- recovery
     def _attempt_with_retries(self, key: tuple, dev_idx: int, body):
@@ -446,6 +483,10 @@ class UnlearningService:
     def _dispatch(self, serves: List[_Serve], t0: float):
         for serve in serves:
             serve.dispatch_off = time.perf_counter() - t0
+            for p in serve.requests:
+                self._journal({"ev": "svc_dispatch",
+                               "request_id": service_request_id(p.req),
+                               "batch_id": serve.batch.bid})
             sim = self.session.sim
             # resolve against completed stages (session step-wise API)
             request = UnlearnRequest(serve.clients,
@@ -528,17 +569,40 @@ class UnlearningService:
                              if p.req.deadline is not None else None),
                     job_attempts=attempts,
                     job_retries=attempts - n_jobs_total,
-                    aborted=aborted)
+                    aborted=aborted,
+                    request_id=service_request_id(p.req))
                 report.entries.append(entry)
+                self._journal({"ev": "svc_commit",
+                               "request_id": entry.request_id,
+                               "entry": entry.to_dict()})
 
     # ---------------------------------------------------------------- serve
-    def serve(self, trace: Sequence[ServiceRequest]) -> ServiceReport:
+    def serve(self, trace: Sequence[ServiceRequest],
+              resume: bool = False) -> ServiceReport:
         """Serve the whole trace: plan the dispatch schedule (virtual,
         deterministic), dispatch every batch's shard programs across the
         placement without blocking, then gather completions into the
-        ledger.  Returns the ``ServiceReport``."""
+        ledger.  Returns the ``ServiceReport``.
+
+        With ``resume=True`` and a journal attached, requests whose
+        ``svc_commit`` is already journaled are NOT re-dispatched — their
+        ledger entries are replayed bit-identically from the journal — and
+        dispatched-but-uncommitted requests (crash between retrain and
+        ledger-commit) re-dispatch exactly once.
+        """
         if not self.session.records:
             raise RuntimeError("train at least one stage before serving")
+        replayed: List[LedgerEntry] = []
+        if resume and self.journal is not None:
+            committed: Dict[str, dict] = {}
+            for ev in self.journal.events():
+                if ev.get("ev") == "svc_commit":
+                    committed[ev["request_id"]] = ev["entry"]
+            if committed:
+                trace = [r for r in trace
+                         if service_request_id(r) not in committed]
+                replayed = [LedgerEntry.from_dict(d)
+                            for d in committed.values()]
         batches = self.plan_schedule(trace)
         self.placement.reset_assignment()
         self.placement.reset_health()
@@ -559,6 +623,7 @@ class UnlearningService:
         self._gather(all_serves, report, t0)
         report.serve_wall = time.perf_counter() - t0
         report.placement = self.placement.describe()   # incl. job counters
+        report.entries.extend(replayed)          # journal-replayed commits
         report.entries.sort(key=lambda e: e.rid)
         rec_after = self._recovery_counters()
         attempts = retries = aborts = 0

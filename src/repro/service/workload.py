@@ -33,6 +33,9 @@ class ServiceRequest:
     the ledger marks the request late when measured latency exceeds it.
     ``apply`` — serving semantics: fold the unlearned shard models back
     into the session's stage records.
+    ``request_id`` — stable idempotency key threaded through the service
+    ledger and journal replay; "" means "derive from rid" (``svc-<rid>``,
+    see ``service_request_id``), so legacy traces keep working.
     """
     t: float
     clients: Tuple[int, ...]
@@ -41,9 +44,17 @@ class ServiceRequest:
     deadline: Optional[float] = None
     apply: bool = False
     rid: int = -1
+    request_id: str = ""
 
     def to_dict(self) -> dict:
         return asdict(self)
+
+
+def service_request_id(req: "ServiceRequest") -> str:
+    """The request's stable idempotency key: its explicit ``request_id`` or
+    the rid-derived ``svc-<rid>`` fallback.  Journal replay and the ledger
+    key on this — never on list positions."""
+    return req.request_id or f"svc-{req.rid}"
 
 
 class VirtualClock:
@@ -190,6 +201,7 @@ def load_trace(path: str) -> List[ServiceRequest]:
                            rounds=r.get("rounds"),
                            deadline=r.get("deadline"),
                            apply=bool(r.get("apply", False)),
-                           rid=int(r.get("rid", i)))
+                           rid=int(r.get("rid", i)),
+                           request_id=str(r.get("request_id", "")))
             for i, r in enumerate(payload["requests"])]
     return sorted(reqs, key=lambda r: (r.t, r.rid))

@@ -1,0 +1,13 @@
+"""Parameter stores — the paper's storage substrate (``full`` / ``uncoded`` /
+``coded``) behind the single ``ParameterStore.put_round(RoundPayload)``
+protocol and the ``STORES`` registry.
+
+This package was historically named ``repro.checkpoint`` — a misnomer: it
+holds the paper's *intermediate parameter stores*, not training checkpoints.
+``repro.checkpoint`` remains importable as a ``DeprecationWarning`` shim;
+real crash-recovery checkpointing lives in ``repro.durability``.
+"""
+from repro.stores.store import (CodedStore, FullStore,  # noqa: F401
+                                ParameterStore, RoundPayload, STORES,
+                                StoreStats, UncodedShardStore, make_store,
+                                register_store, tree_bytes)

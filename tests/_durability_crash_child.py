@@ -1,0 +1,144 @@
+"""Child process for the durability kill/resume acceptance test.
+
+Three modes (``argv[1]``, with ``argv[2]`` = checkpoint directory):
+
+- ``baseline``: run the 3-stage session uninterrupted (no checkpointing)
+  and print its content signature.
+- ``crash``: run the same session with checkpointing and a ``process_kill``
+  injector in ``mode="exit"`` — the process dies via ``os._exit(137)``
+  mid-session (stage 1 served, snapshot not yet written), leaving only the
+  snapshots and journal behind.
+- ``resume``: build a fresh identically-configured session, resume from the
+  checkpoint directory the dead process left, finish the run, and print
+  its signature plus resume accounting.
+
+The signature hashes every shard model, every coded slice, every unlearn
+result model, and the report JSON with wall-time fields zeroed — the
+parent test asserts crash+resume is bit-identical to the baseline.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses  # noqa: E402
+import hashlib  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import FLConfig, OptimizerConfig, get_config  # noqa: E402
+from repro.faults import FaultPlan  # noqa: E402
+from repro.data import client_datasets_images, make_image_data  # noqa: E402
+from repro.fl import FLSimulator  # noqa: E402
+from repro.fl.experiment import (FederatedSession,  # noqa: E402
+                                 RequestSchedule, UnlearnRequest)
+
+FL = FLConfig(num_clients=10, clients_per_round=8, num_shards=2,
+              local_epochs=2, global_rounds=2, retrain_ratio=2.0)
+NUM_STAGES = 3
+WALL_FIELDS = ("train_wall_s", "wall_time_s", "total_train_wall_s",
+               "total_unlearn_wall_s")
+
+
+def _zero_walls(node):
+    if isinstance(node, dict):
+        return {k: (0.0 if k in WALL_FIELDS else _zero_walls(v))
+                for k, v in node.items()}
+    if isinstance(node, list):
+        return [_zero_walls(x) for x in node]
+    return node
+
+
+def _hash_tree(h, tree):
+    for leaf in jax.tree.leaves(tree):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str((a.dtype.name, a.shape)).encode())
+        h.update(a.tobytes())
+
+
+def session_signature(session) -> str:
+    """Content hash of everything the durability contract promises: shard
+    models, coded slices, unlearn-result models, and the (wall-free)
+    accounting report."""
+    h = hashlib.sha256()
+    for rec in session.records:
+        for s in sorted(rec.shard_models):
+            _hash_tree(h, rec.shard_models[s])
+        store = rec.store
+        if hasattr(store, "flush"):
+            store.flush()
+        for key in sorted(getattr(store, "_slices", {}), key=repr):
+            _hash_tree(h, store._slices[key])
+    for st in session.report.stages:
+        for u in st.unlearn:
+            h.update(u.request_id.encode())
+            for s in sorted(u.models):
+                _hash_tree(h, u.models[s])
+    h.update(json.dumps(_zero_walls(session.report.to_dict()),
+                        sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def make_schedule() -> RequestSchedule:
+    # callable clients: resolved against the trained plan when served, so
+    # every run (baseline / crashed / resumed) targets the same victims
+    return RequestSchedule([
+        UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                       after_stage=0, rounds=1),
+        UnlearnRequest(lambda p: [p.shard_clients[1][0]], framework="SE",
+                       after_stage=1, rounds=1),
+        UnlearnRequest(lambda p: [p.shard_clients[0][0]], framework="SE",
+                       after_stage=2, rounds=1),
+    ])
+
+
+def build_session(ckpt_dir=None, faults=None) -> FederatedSession:
+    cfg = dataclasses.replace(get_config("cnn-paper"), image_size=8,
+                              d_model=16, cnn_channels=(4, 4))
+    data = make_image_data(FL.num_clients * 30, image_size=8, seed=0)
+    clients = client_datasets_images(data, FL.num_clients, iid=True)
+    sim = FLSimulator(cfg, FL, clients, task="image",
+                      opt_cfg=OptimizerConfig(name="sgdm", lr=0.05,
+                                              grad_clip=0.0),
+                      local_batch=10, seed=0)
+    return FederatedSession(sim, store_kind="coded", faults=faults,
+                            checkpoint_every=1 if ckpt_dir else 0,
+                            checkpoint_dir=ckpt_dir)
+
+
+def main():
+    mode, ckpt_dir = sys.argv[1], sys.argv[2]
+    if mode == "baseline":
+        session = build_session()
+        session.run(NUM_STAGES, schedule=make_schedule())
+        print(json.dumps({"sig": session_signature(session)}))
+    elif mode == "crash":
+        plan = FaultPlan(seed=7).add("process_kill", stage=1,
+                                     phase="after_requests", mode="exit",
+                                     exit_code=137)
+        session = build_session(ckpt_dir, faults=plan)
+        session.run(NUM_STAGES, schedule=make_schedule())
+        print(json.dumps({"error": "process_kill never fired"}))
+        sys.exit(3)
+    elif mode == "resume":
+        session = build_session(ckpt_dir)
+        session.run(NUM_STAGES, schedule=make_schedule(),
+                    resume_from=ckpt_dir)
+        info = session.last_resume_info
+        pairs = [(i, u.request_id)
+                 for i, st in enumerate(session.report.stages)
+                 for u in st.unlearn]
+        print(json.dumps({"sig": session_signature(session),
+                          "start_stage": info["start_stage"],
+                          "resumed_step": info["step"],
+                          "inflight": info["inflight"],
+                          "request_ids": sorted({r for _, r in pairs}),
+                          "once_per_stage": len(pairs) == len(set(pairs))}))
+    else:
+        raise SystemExit(f"unknown mode {mode!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -150,7 +150,7 @@ class TestErrorDecodingPaths:
     def test_decode_with_errors_through_coded_store(self):
         """CodedStore.get_shard(corrupt=...) routes through the
         error-correcting decode and still reconstructs every client tree."""
-        from repro.checkpoint.store import CodedStore, RoundPayload
+        from repro.stores.store import CodedStore, RoundPayload
 
         sch = _scheme(self.C, self.S)
         shard_clients = {s: [2 * s, 2 * s + 1] for s in range(self.S)}

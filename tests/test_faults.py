@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CodedStore, RoundPayload, StoreStats
+from repro.stores.store import CodedStore, RoundPayload, StoreStats
 from repro.configs import FLConfig, OptimizerConfig, get_config
 from repro.core import coding
 from repro.core.coding import CodingBudgetExceeded, CodingScheme
@@ -562,7 +562,7 @@ class TestChaoticServe:
         d = json.loads(rep.to_json())
         assert d["faults"]["retries"] >= 1
         assert d["faults"]["recoveries"] >= 1
-        assert d["requests"][0]["job_attempts"] >= 2
+        assert d["requests"]["svc-0"]["job_attempts"] >= 2
         assert d["num_aborted"] == 0
 
 

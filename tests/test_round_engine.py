@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CodedStore, FullStore, RoundPayload
+from repro.stores.store import CodedStore, FullStore, RoundPayload
 from repro.configs import FLConfig, OptimizerConfig, get_config
 from repro.core import coding, unlearning
 from repro.data import client_datasets_images, make_image_data

@@ -11,7 +11,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import (RoundPayload, STORES, StoreStats,
+from repro.stores.store import (RoundPayload, STORES, StoreStats,
                                     make_store)
 from repro.configs import FLConfig, OptimizerConfig, get_config
 from repro.data import client_datasets_images, make_image_data
