@@ -24,22 +24,29 @@ def main(argv=None) -> None:
     sys.path.insert(0, "src")
     from benchmarks import (fig3_single_request, fig4_concurrent, fig5_storage,
                             fig6_round_engine, fig7_service, fig8_faults,
-                            fig9_durability, kernels_bench, table1_f1_time,
-                            theory_check, verify_bench)
+                            fig9_durability, fig10_telemetry, kernels_bench,
+                            table1_f1_time, theory_check, verify_bench)
     from benchmarks import common
     from benchmarks.common import Scale, emit
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,fig9,"
-                         "table1,verify,theory,kernels")
+                         "fig10,table1,verify,theory,kernels")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (100 clients, G=30, L=10) — slow on CPU")
     ap.add_argument("--fast", action="store_true",
                     help="minimal scale for CI")
     ap.add_argument("--json-dir", default=None,
                     help="write BENCH_<suite>.json per suite to this directory")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="run the suites under the span tracer and print the "
+                         "aggregated span tree at the end")
     args = ap.parse_args(argv)
+
+    if args.trace_summary:
+        from repro.telemetry import configure
+        configure(enabled=True)
 
     sc = Scale.full() if args.full else Scale()
     if args.fast:
@@ -57,6 +64,7 @@ def main(argv=None) -> None:
         "fig7": fig7_service.run,
         "fig8": fig8_faults.run,
         "fig9": fig9_durability.run,
+        "fig10": fig10_telemetry.run,
         "table1": table1_f1_time.run,
         "verify": verify_bench.run,
     }
@@ -84,6 +92,10 @@ def main(argv=None) -> None:
                 json.dump(payload, f, indent=2)
             print(f"# wrote {path}", flush=True)
     emit("bench_total_wall", (time.time() - t0) * 1e6, f"suites={len(only)}")
+    if args.trace_summary:
+        from repro.telemetry import get_tracer, render_tree
+        print("# --- trace summary ---", flush=True)
+        print(render_tree(get_tracer()), flush=True)
 
 
 if __name__ == "__main__":

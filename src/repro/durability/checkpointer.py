@@ -48,23 +48,31 @@ class CheckpointManager:
         return sorted(out)
 
     def save(self, state, step: int) -> str:
+        from repro.telemetry import get_tracer
         path = self.snapshot_path(step)
-        self.last_save_bytes = save_snapshot(path, state)
-        if self.faults is not None and hasattr(self.faults, "post_snapshot"):
-            self.faults.post_snapshot(path, step)
-        self._prune()
+        with get_tracer().span("durability.snapshot", step=step) as sp:
+            self.last_save_bytes = save_snapshot(path, state)
+            sp.annotate(bytes=self.last_save_bytes)
+            if self.faults is not None and hasattr(self.faults,
+                                                   "post_snapshot"):
+                self.faults.post_snapshot(path, step)
+            self._prune()
         return path
 
     def load_latest(self) -> Optional[Tuple[object, int, str]]:
         """Newest good ``(state, step, path)``; corrupt snapshots are skipped
         (collected in ``self.skipped``) — the torn-write fallback path."""
+        from repro.telemetry import get_tracer
         self.skipped = []
-        for step in reversed(self.steps()):
-            path = self.snapshot_path(step)
-            try:
-                return load_snapshot(path), step, path
-            except SnapshotCorruption:
-                self.skipped.append(path)
+        with get_tracer().span("durability.restore") as sp:
+            for step in reversed(self.steps()):
+                path = self.snapshot_path(step)
+                try:
+                    state = load_snapshot(path)
+                    sp.annotate(step=step, skipped=len(self.skipped))
+                    return state, step, path
+                except SnapshotCorruption:
+                    self.skipped.append(path)
         return None
 
     def _prune(self) -> None:

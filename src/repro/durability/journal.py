@@ -55,9 +55,14 @@ class Journal:
         rec = json.dumps({"seq": self._seq, "ev": event}, sort_keys=True)
         if self._f is None:
             self._f = open(self.path, "a")
-        self._f.write(f"{zlib.crc32(rec.encode()):08x} {rec}\n")
-        self._f.flush()
-        os.fsync(self._f.fileno())
+        from repro.telemetry import get_tracer
+        tr = get_tracer()
+        with tr.span("durability.journal_append",
+                     kind=str(event.get("ev", "?"))[:24]):
+            self._f.write(f"{zlib.crc32(rec.encode()):08x} {rec}\n")
+            self._f.flush()
+            os.fsync(self._f.fileno())
+        tr.metrics.counter("durability.journal_appends").inc()
         seq, self._seq = self._seq, self._seq + 1
         return seq
 

@@ -149,6 +149,17 @@ class FaultLedger:
     def record(self, event) -> None:
         with self._lock:
             self._events.append(event)
+        # single telemetry hook: every injection/recovery/degradation flows
+        # through here, so the tracer sees them all as instant events
+        from repro.telemetry import get_tracer
+        tr = get_tracer()
+        if tr.enabled:
+            family = ("fault.recovery" if isinstance(event, RecoveryEvent)
+                      else "fault.degraded"
+                      if isinstance(event, DegradedModeEvent)
+                      else "fault.inject")
+            tr.event(family, kind=event.kind, site=str(event.site))
+            tr.metrics.counter(family, kind=event.kind).inc()
 
     @property
     def events(self) -> List:

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import unlearning
 from repro.models import init_params
+from repro.telemetry import get_tracer
 
 
 @dataclass
@@ -201,11 +202,15 @@ def run_unlearn(sim, framework: str, record, requests: Sequence[int],
                          rounds or sim.fl.global_rounds, available, corrupt)
     t0 = time.perf_counter()
     impacted = ctx.impacted
-    models, cost = fw.run(ctx)
-    # block on EVERY returned model: blocking only the first dict entry
-    # under-measures serves whose impacted shard is not the first key (its
-    # retrain would still be in flight when the wall is recorded)
-    jax.block_until_ready(list(models.values()))
+    with get_tracer().span("unlearn.dispatch", framework=fw.name,
+                           clients=sorted(requests),
+                           impacted=impacted) as sp:
+        models, cost = fw.run(ctx)
+        # block on EVERY returned model: blocking only the first dict entry
+        # under-measures serves whose impacted shard is not the first key
+        # (its retrain would still be in flight when the wall is recorded)
+        jax.block_until_ready(list(models.values()))
+        sp.annotate(cost_units=float(cost))
     wall = time.perf_counter() - t0
     stats = getattr(record.store, "stats", None)
     return UnlearnResult(framework, models, wall, cost, stats, impacted)
@@ -312,12 +317,14 @@ def run_prepared_job(ctx: UnlearnContext, job, device=None):
     ``jax.devices()``.  ``device=None`` is bit-identical to the in-process
     sequential path (it IS the sequential path)."""
     s, retained, xs, ys, w, nmat, n_r = job
-    if device is not None:
-        xs, ys, w, nmat = jax.device_put((xs, ys, w, nmat), device)
-    cost = 0.0
-    for g in range(n_r):
-        w = ctx.calib_round(w, xs, ys, nmat[g])
-        cost += len(retained) * ctx.retrain_epochs
+    with get_tracer().span("unlearn.shard", shard=s, rounds=n_r,
+                           retained=len(retained)):
+        if device is not None:
+            xs, ys, w, nmat = jax.device_put((xs, ys, w, nmat), device)
+        cost = 0.0
+        for g in range(n_r):
+            w = ctx.calib_round(w, xs, ys, nmat[g])
+            cost += len(retained) * ctx.retrain_epochs
     return s, w, cost
 
 

@@ -27,6 +27,7 @@ from typing import Callable, List, Optional, Sequence, Union
 from repro.stores.store import StoreStats
 from repro.fl.experiment.frameworks import run_unlearn
 from repro.fl.experiment.stage import train_stage
+from repro.telemetry import AuditLog, get_tracer
 
 ClientSpec = Union[Sequence[int], Callable[[object], Sequence[int]]]
 
@@ -127,7 +128,7 @@ class SessionReport:
         return total
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "store_kind": self.store_kind,
             "num_stages": len(self.stages),
             "total_train_wall_s": self.total_train_wall,
@@ -136,6 +137,10 @@ class SessionReport:
             "store_stats": self.store_stats.to_dict(),
             "stages": [s.to_dict() for s in self.stages],
         }
+        tr = get_tracer()
+        if tr.enabled:
+            d["telemetry"] = tr.describe()
+        return d
 
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 2)
@@ -187,23 +192,34 @@ class FederatedSession:
                 self.checkpoint_every = 1        # dir given: snapshot per stage
         self._served: set = set()                # committed request ids
         self.last_resume_info: Optional[dict] = None
+        # hash-chained audit of unlearning lifecycle events; journal-backed
+        # (and crash-durable) whenever the session checkpoints
+        self.audit = AuditLog(
+            journal=self.checkpointer.journal
+            if self.checkpointer is not None else None)
 
     # ---------------------------------------------------------------- stages
     def run_stage(self, rounds: Optional[int] = None):
         """Train the next stage and append its record + report entry."""
+        tr = get_tracer()
         t0 = time.perf_counter()
-        record = train_stage(self.sim, store_kind=self.store_kind,
-                             rounds=rounds or self.rounds, engine=self.engine,
-                             encode_group=self.encode_group,
-                             slice_dtype=self.slice_dtype,
-                             faults=self.faults)
+        with tr.span("session.stage", stage=len(self.records),
+                     engine=self.engine, store=self.store_kind):
+            record = train_stage(self.sim, store_kind=self.store_kind,
+                                 rounds=rounds or self.rounds,
+                                 engine=self.engine,
+                                 encode_group=self.encode_group,
+                                 slice_dtype=self.slice_dtype,
+                                 faults=self.faults)
         wall = time.perf_counter() - t0
         self.records.append(record)
+        stats = record.store.stats.snapshot()
+        tr.metrics.absorb_store_stats(stats, stage=len(self.records) - 1)
         self.report.stages.append(StageReport(
             stage=len(self.records) - 1, plan_stage=record.plan.stage,
             train_wall=wall, num_shards=record.plan.num_shards,
             clients=record.plan.clients,
-            store_stats=record.store.stats.snapshot()))
+            store_stats=stats))
         return record
 
     # -------------------------------------------------------------- requests
@@ -356,6 +372,10 @@ class FederatedSession:
         start = session_state.restore_session(self, state)
         if self.checkpointer is None:
             self.checkpointer = mgr
+        # splice the audit chain: replay + verify the journaled chain and
+        # continue appending from its head, one verifiable history
+        if getattr(self.audit, "journal", None) is not mgr.journal:
+            self.audit = AuditLog(journal=mgr.journal)
         # exactly-once accounting: ids dispatched but never committed in the
         # journal are re-dispatched by the resumed run (they are absent from
         # the restored report); committed ids at/before the snapshot are in
@@ -412,13 +432,22 @@ class FederatedSession:
             due = [r for r in due if r.request_id not in self._served]
             if due:
                 rids = [r.request_id for r in due]
+                for rid in rids:
+                    self.audit.record("received", request_id=rid,
+                                      after_stage=k)
                 if self.batch_requests:
                     self._journal({"ev": "req_dispatch", "rids": rids,
                                    "stage_after": k})
                     self.unlearn_batch(due)
                     self._served.update(rids)
+                    for rid in rids:
+                        self.audit.record("retrained", request_id=rid,
+                                          after_stage=k, batched=True)
                     self._journal({"ev": "req_commit", "rids": rids,
                                    "stage_after": k})
+                    for rid in rids:
+                        self.audit.record("committed", request_id=rid,
+                                          after_stage=k)
                 else:
                     for req in due:
                         self._journal({"ev": "req_dispatch",
@@ -426,9 +455,15 @@ class FederatedSession:
                                        "stage_after": k})
                         self.unlearn(req)
                         self._served.add(req.request_id)
+                        self.audit.record("retrained",
+                                          request_id=req.request_id,
+                                          after_stage=k, batched=False)
                         self._journal({"ev": "req_commit",
                                        "rids": [req.request_id],
                                        "stage_after": k})
+                        self.audit.record("committed",
+                                          request_id=req.request_id,
+                                          after_stage=k)
             self._crash_site("after_requests", k)
             self._maybe_checkpoint(k, num_stages)
             self._journal({"ev": "stage_commit", "stage": k})

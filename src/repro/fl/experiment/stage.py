@@ -36,6 +36,7 @@ import numpy as np
 from repro.stores.store import RoundPayload
 from repro.core import coding, unlearning
 from repro.models import init_params
+from repro.telemetry import get_tracer
 
 ENGINES = ("stage", "fused", "legacy")
 
@@ -70,52 +71,63 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
                              "'fused' or 'stage'")
         if faults is not None:
             raise ValueError("fault plans need engine='fused' or 'stage'")
-        return _train_stage_legacy(sim, store_kind, rounds)
+        with get_tracer().span("stage.train", engine=engine,
+                               store=store_kind) as sp:
+            rec = _train_stage_legacy(sim, store_kind, rounds)
+            sp.annotate(stage=rec.plan.stage)
+            return rec
     if engine == "stage" and encode_group is not None:
         raise ValueError("encode_group is a fused-engine option; the stage "
                          "engine always encodes all rounds in-program")
 
     fl = sim.fl
     g_rounds = rounds or fl.global_rounds
-    plan = sim.mgr.new_stage()
-    rng = jax.random.key(sim.seed + plan.stage)
-    w0 = init_params(sim.cfg, rng)
-    dropped = []
-    if faults is not None:
-        by_shard = faults.dropped_clients(plan.stage, plan.shard_clients)
-        for s, cs in by_shard.items():
-            gone = set(cs)
-            plan.shard_clients[s] = [c for c in plan.shard_clients[s]
-                                     if c not in gone]
-            dropped.extend(cs)
-        dropped.sort()
-    store = sim._make_store(store_kind, plan,
-                            group_rounds=encode_group or g_rounds,
-                            slice_dtype=slice_dtype)
-    if faults is not None and hasattr(store, "attach_faults"):
-        store.attach_faults(faults)
-    # the store's preferred payload form decides what the jitted round step
-    # computes on device; anything unknown degrades to stacked trees.
-    kind = "flat" if getattr(store, "wants", "stacked") == "flat" else "stacked"
-    data = {s: sim._stack_client_data(cs)
-            for s, cs in plan.shard_clients.items()}
-
-    if engine == "stage":
-        if _stackable(plan, data):
-            return _run_stage_program(sim, plan, store, w0, data, g_rounds,
-                                      kind, slice_dtype)
+    with get_tracer().span("stage.train", engine=engine,
+                           store=store_kind) as sp:
+        plan = sim.mgr.new_stage()
+        rng = jax.random.key(sim.seed + plan.stage)
+        w0 = init_params(sim.cfg, rng)
+        dropped = []
         if faults is not None:
-            from repro.faults.events import DegradedModeEvent
-            faults.ledger.record(DegradedModeEvent(
-                stage=plan.stage,
-                reason="ragged_stage", fallback="fused",
-                dropped_clients=tuple(dropped)))
-        else:
-            warnings.warn(
-                "ragged stage (unequal client or sample counts per shard); "
-                "stage engine degrading to per-shard fused dispatch",
-                stacklevel=2)
-    return _run_fused(sim, plan, store, w0, data, g_rounds, kind)
+            by_shard = faults.dropped_clients(plan.stage, plan.shard_clients)
+            for s, cs in by_shard.items():
+                gone = set(cs)
+                plan.shard_clients[s] = [c for c in plan.shard_clients[s]
+                                         if c not in gone]
+                dropped.extend(cs)
+            dropped.sort()
+        sp.annotate(stage=plan.stage, shards=len(plan.shard_clients),
+                    rounds=g_rounds, dropped=len(dropped))
+        store = sim._make_store(store_kind, plan,
+                                group_rounds=encode_group or g_rounds,
+                                slice_dtype=slice_dtype)
+        if faults is not None and hasattr(store, "attach_faults"):
+            store.attach_faults(faults)
+        # the store's preferred payload form decides what the jitted round
+        # step computes on device; anything unknown degrades to stacked trees.
+        kind = ("flat" if getattr(store, "wants", "stacked") == "flat"
+                else "stacked")
+        data = {s: sim._stack_client_data(cs)
+                for s, cs in plan.shard_clients.items()}
+
+        if engine == "stage":
+            if _stackable(plan, data):
+                return _run_stage_program(sim, plan, store, w0, data,
+                                          g_rounds, kind, slice_dtype)
+            sp.annotate(degraded="ragged_stage")
+            if faults is not None:
+                from repro.faults.events import DegradedModeEvent
+                faults.ledger.record(DegradedModeEvent(
+                    stage=plan.stage,
+                    reason="ragged_stage", fallback="fused",
+                    dropped_clients=tuple(dropped)))
+            else:
+                warnings.warn(
+                    "ragged stage (unequal client or sample counts per "
+                    "shard); stage engine degrading to per-shard fused "
+                    "dispatch",
+                    stacklevel=2)
+        return _run_fused(sim, plan, store, w0, data, g_rounds, kind)
 
 
 def _stackable(plan, data) -> bool:
@@ -148,13 +160,22 @@ def _run_stage_program(sim, plan, store, w0, data, g_rounds, kind,
                                   encode=encode, out_dtype=slice_dtype,
                                   use_kernel=use_kernel)
     row_spec = coding.tree_to_flat(w0)[1] if kind == "flat" else None
+    tr = get_tracer()
     if encode:
         enc = jnp.asarray(store.scheme.encode_matrix(), jnp.float32)
-        final, round_in, hist, norms_dev = prog(w0, xs, ys, enc)
+        args = (w0, xs, ys, enc)
+    else:
+        args = (w0, xs, ys)
+    with tr.span("xla.stage_program", stage=plan.stage, shards=len(shards),
+                 rounds=g_rounds, encode=encode) as sp:
+        if tr.annotate_costs:
+            from repro.telemetry.export import hlo_cost_of
+            sp.annotate(**hlo_cost_of(prog, *args))
+        final, round_in, hist, norms_dev = prog(*args)
+    if encode:
         store.put_stage_encoded(hist, row_spec,
                                 row_len=_flat_row_len(w0))
     else:
-        final, round_in, hist, norms_dev = prog(w0, xs, ys)
         for g in range(g_rounds):
             if kind == "flat":
                 payload = RoundPayload.from_flat(

@@ -164,35 +164,43 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             variant: str = "auto", save: bool = True,
             overrides: dict = None, tag: str = "",
             strategy: str = "tp") -> dict:
-    t0 = time.time()
+    from repro.telemetry import get_tracer
+    # monotonic wall measurement (time.time() can jump under NTP slew) —
+    # and the same interval lands in the trace as a "dryrun.compile" span
+    t0 = time.perf_counter()
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "status": "ok", "notes": [], "strategy": strategy}
-    try:
-        lowered, mesh, cfg, notes = build_lowered(arch, shape_name, multi_pod,
-                                                  variant, overrides=overrides,
-                                                  strategy=strategy)
-        rec["notes"] = notes
-        if lowered is None:
-            rec["status"] = "skipped"
-            return _finish(rec, t0, save, tag)
-        compiled = lowered.compile()
-        mem = compiled.memory_analysis()
-        rec["memory_analysis"] = _mem_dict(mem)
-        from repro.roofline.hlo_cost import xla_cost_analysis
-        rec["cost_analysis"] = {k: float(v) for k, v in
-                                xla_cost_analysis(compiled).items()
-                                if isinstance(v, (int, float))}
-        rec.update(analyze_compiled(compiled, mesh, cfg, SHAPES[shape_name]))
-        print(compiled.memory_analysis())
-        ca = rec["cost_analysis"]
-        print({k: ca[k] for k in ("flops", "bytes accessed")
-               if k in ca})
-    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
-        rec["status"] = "error"
-        rec["error"] = f"{type(e).__name__}: {e}"
-        rec["traceback"] = traceback.format_exc()[-2000:]
-    return _finish(rec, t0, save, tag)
+    with get_tracer().span("dryrun.compile", arch=arch, shape=shape_name,
+                           mesh=mesh_name) as sp:
+        try:
+            lowered, mesh, cfg, notes = build_lowered(
+                arch, shape_name, multi_pod, variant, overrides=overrides,
+                strategy=strategy)
+            rec["notes"] = notes
+            if lowered is None:
+                rec["status"] = "skipped"
+                sp.annotate(status="skipped")
+                return _finish(rec, t0, save, tag)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            rec["memory_analysis"] = _mem_dict(mem)
+            from repro.roofline.hlo_cost import xla_cost_analysis
+            rec["cost_analysis"] = {k: float(v) for k, v in
+                                    xla_cost_analysis(compiled).items()
+                                    if isinstance(v, (int, float))}
+            rec.update(analyze_compiled(compiled, mesh, cfg,
+                                        SHAPES[shape_name]))
+            print(compiled.memory_analysis())
+            ca = rec["cost_analysis"]
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+        except Exception as e:  # noqa: BLE001 — record, keep sweeping
+            rec["status"] = "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+        sp.annotate(status=rec["status"])
+        return _finish(rec, t0, save, tag)
 
 
 def _mem_dict(mem):
@@ -208,7 +216,7 @@ def _mem_dict(mem):
 
 
 def _finish(rec, t0, save, tag):
-    rec["wall_s"] = round(time.time() - t0, 2)
+    rec["wall_s"] = round(time.perf_counter() - t0, 2)
     if save:
         OUT_DIR.mkdir(parents=True, exist_ok=True)
         name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"

@@ -56,6 +56,7 @@ from repro.service.placement import DevicePlacement
 from repro.service.policy import Pending, SchedulingPolicy, make_policy
 from repro.service.workload import (ServiceRequest, VirtualClock,
                                     service_request_id)
+from repro.telemetry import AuditLog, get_tracer
 
 
 @dataclass(frozen=True)
@@ -228,8 +229,19 @@ class ServiceReport:
     def total_retrain_wall(self) -> float:
         return sum(e.retrain_wall for e in self.entries)
 
+    def per_client_p99(self) -> Dict[int, float]:
+        """{client: p99 latency} over completed requests naming the client —
+        the per-client breakdown aggregate percentiles hide (ROADMAP item 3:
+        a hot client can starve behind a healthy aggregate p99)."""
+        by_client: Dict[int, List[float]] = {}
+        for e in self.completed:
+            for c in e.clients:
+                by_client.setdefault(int(c), []).append(e.latency)
+        return {c: float(np.percentile(np.asarray(v, np.float64), 99))
+                for c, v in sorted(by_client.items())}
+
     def to_dict(self) -> dict:
-        return {
+        d = {
             "policy": self.policy,
             "placement": self.placement,
             "num_requests": len(self.entries),
@@ -246,7 +258,13 @@ class ServiceReport:
             # replay / resumed serves merge into an identical report
             "requests": {(e.request_id or f"svc-{e.rid}"): e.to_dict()
                          for e in self.entries},
+            "client_latency_p99_s": {str(c): v for c, v
+                                     in self.per_client_p99().items()},
         }
+        tr = get_tracer()
+        if tr.enabled:
+            d["telemetry"] = tr.describe()
+        return d
 
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 2)
@@ -307,6 +325,10 @@ class UnlearningService:
         # between leaves the id dispatched-but-uncommitted, and
         # serve(resume=True) re-dispatches it exactly once
         self.journal = journal
+        # hash-chained lifecycle audit (received → scheduled → retrained →
+        # committed); with a journal the chain is durable and a fresh service
+        # on the same journal splices onto the existing chain (resume path)
+        self.audit = AuditLog(journal=journal)
 
     def _journal(self, event: dict) -> None:
         if self.journal is not None:
@@ -387,30 +409,49 @@ class UnlearningService:
         Pure virtual time — no wall clock, no device work."""
         arrivals = sorted(trace, key=lambda r: (r.t, r.rid))
         clock = VirtualClock()
+        tr = get_tracer()
+        # spans opened from here on carry the deterministic virtual time of
+        # the discrete-event loop alongside their measured wall offsets
+        tr.attach_clock(clock)
+        for req in arrivals:
+            self.audit.record("received",
+                              request_id=service_request_id(req),
+                              clients=list(req.clients),
+                              framework=req.framework, t_virtual=req.t)
         queue: List[Pending] = []
         batches: List[_Batch] = []
         i = 0
-        while i < len(arrivals) or queue:
-            candidates = []
-            if i < len(arrivals):
-                candidates.append(arrivals[i].t)
-            t_policy = self.policy.next_event(queue, clock.now)
-            if t_policy is not None:
-                candidates.append(t_policy)
-            final = not candidates
-            if candidates:
-                clock.advance_to(min(candidates))
-            while i < len(arrivals) and arrivals[i].t <= clock.now:
-                req = arrivals[i]
-                queue.append(Pending(req, impacted=self._impact_of(req)))
-                i += 1
-            for group in self.policy.release(queue, clock.now, final=final):
-                batches.append(_Batch(len(batches), clock.now, group))
-            if final and queue:
-                # a policy that neither timed out nor drained would hang the
-                # loop — force the remainder out as one final batch
-                batches.append(_Batch(len(batches), clock.now, list(queue)))
-                queue.clear()
+        with tr.span("service.plan", requests=len(arrivals)) as sp:
+            while i < len(arrivals) or queue:
+                candidates = []
+                if i < len(arrivals):
+                    candidates.append(arrivals[i].t)
+                t_policy = self.policy.next_event(queue, clock.now)
+                if t_policy is not None:
+                    candidates.append(t_policy)
+                final = not candidates
+                if candidates:
+                    clock.advance_to(min(candidates))
+                while i < len(arrivals) and arrivals[i].t <= clock.now:
+                    req = arrivals[i]
+                    queue.append(Pending(req, impacted=self._impact_of(req)))
+                    i += 1
+                for group in self.policy.release(queue, clock.now,
+                                                 final=final):
+                    batches.append(_Batch(len(batches), clock.now, group))
+                if final and queue:
+                    # a policy that neither timed out nor drained would hang
+                    # the loop — force the remainder out as one final batch
+                    batches.append(_Batch(len(batches), clock.now,
+                                          list(queue)))
+                    queue.clear()
+            sp.annotate(batches=len(batches))
+        for b in batches:
+            for p in b.pendings:
+                self.audit.record(
+                    "scheduled", request_id=service_request_id(p.req),
+                    batch_id=b.bid, t_virtual=b.time,
+                    shards=[list(x) for x in sorted(p.impacted)])
         return batches
 
     # ------------------------------------------------------------- dispatch
@@ -451,8 +492,11 @@ class UnlearningService:
             return {"models": {s: w}, "cost": cost}
 
         key = ("shard", stage, shard, tuple(serve.clients))
-        out, dev_idx, attempts, aborted = self._attempt_with_retries(
-            key, dev_idx, body)
+        with get_tracer().span("service.job", kind="shard", stage=stage,
+                               shard=shard, batch=serve.batch.bid) as sp:
+            out, dev_idx, attempts, aborted = self._attempt_with_retries(
+                key, dev_idx, body)
+            sp.annotate(device=dev_idx, attempts=attempts, aborted=aborted)
         if out is None:
             out = {"models": {}, "cost": 0.0}
         return {**out, "start": start, "done": time.perf_counter() - t0,
@@ -473,44 +517,56 @@ class UnlearningService:
             return {"models": models, "cost": cost}
 
         key = ("federation", stage, tuple(serve.clients))
-        out, dev_idx, attempts, aborted = self._attempt_with_retries(
-            key, dev_idx, body)
+        with get_tracer().span("service.job", kind="federation", stage=stage,
+                               batch=serve.batch.bid) as sp:
+            out, dev_idx, attempts, aborted = self._attempt_with_retries(
+                key, dev_idx, body)
+            sp.annotate(device=dev_idx, attempts=attempts, aborted=aborted)
         if out is None:
             out = {"models": {}, "cost": 0.0}
         return {**out, "start": start, "done": time.perf_counter() - t0,
                 "device": dev_idx, "attempts": attempts, "aborted": aborted}
 
     def _dispatch(self, serves: List[_Serve], t0: float):
+        tr = get_tracer()
         for serve in serves:
             serve.dispatch_off = time.perf_counter() - t0
-            for p in serve.requests:
-                self._journal({"ev": "svc_dispatch",
-                               "request_id": service_request_id(p.req),
-                               "batch_id": serve.batch.bid})
-            sim = self.session.sim
-            # resolve against completed stages (session step-wise API)
-            request = UnlearnRequest(serve.clients,
-                                     framework=serve.framework,
-                                     rounds=serve.rounds, apply=serve.apply)
-            _clients, stage_plan = self.session.resolve_request(request)
-            fw_cls = FRAMEWORKS[serve.framework]
-            rounds = (serve.rounds or self.session.rounds
-                      or sim.fl.global_rounds)
-            for i, stage_clients in stage_plan.items():
-                record = self.session.records[i]
-                ctx = UnlearnContext(sim, record, list(stage_clients), rounds)
-                serve.stage_ctxs[i] = ctx
-                futures = []
-                if fw_cls.shard_level:
-                    for shard in ctx.impacted:
+            with tr.span("service.dispatch", batch=serve.batch.bid,
+                         framework=serve.framework,
+                         clients=sorted(serve.clients)) as sp:
+                for p in serve.requests:
+                    self._journal({"ev": "svc_dispatch",
+                                   "request_id": service_request_id(p.req),
+                                   "batch_id": serve.batch.bid})
+                sim = self.session.sim
+                # resolve against completed stages (session step-wise API)
+                request = UnlearnRequest(serve.clients,
+                                         framework=serve.framework,
+                                         rounds=serve.rounds,
+                                         apply=serve.apply)
+                _clients, stage_plan = self.session.resolve_request(request)
+                fw_cls = FRAMEWORKS[serve.framework]
+                rounds = (serve.rounds or self.session.rounds
+                          or sim.fl.global_rounds)
+                n_jobs = 0
+                for i, stage_clients in stage_plan.items():
+                    record = self.session.records[i]
+                    ctx = UnlearnContext(sim, record, list(stage_clients),
+                                         rounds)
+                    serve.stage_ctxs[i] = ctx
+                    futures = []
+                    if fw_cls.shard_level:
+                        for shard in ctx.impacted:
+                            dev = self.placement.assign()
+                            futures.append(self.placement.submit(
+                                self._job_shard, serve, i, shard, dev, t0))
+                    else:
                         dev = self.placement.assign()
                         futures.append(self.placement.submit(
-                            self._job_shard, serve, i, shard, dev, t0))
-                else:
-                    dev = self.placement.assign()
-                    futures.append(self.placement.submit(
-                        self._job_federation, serve, i, dev, t0))
-                serve.stage_jobs[i] = futures
+                            self._job_federation, serve, i, dev, t0))
+                    serve.stage_jobs[i] = futures
+                    n_jobs += len(futures)
+                sp.annotate(n_jobs=n_jobs)
 
     # --------------------------------------------------------------- gather
     def _gather(self, serves: List[_Serve], report: ServiceReport, t0: float):
@@ -553,6 +609,13 @@ class UnlearningService:
             n_jobs_total = sum(len(v) for v in outs.values())
             aborted = any(o.get("aborted", False) for os_ in outs.values()
                           for o in os_)
+            tr = get_tracer()
+            for p in serve.requests:
+                self.audit.record(
+                    "retrained", request_id=service_request_id(p.req),
+                    batch_id=serve.batch.bid,
+                    shards=[list(x) for x in sorted(p.impacted)],
+                    aborted=aborted)
             for p in serve.requests:
                 queue_wait = serve.batch.time - p.req.t
                 latency = queue_wait + batch_wait + retrain_wall
@@ -575,6 +638,14 @@ class UnlearningService:
                 self._journal({"ev": "svc_commit",
                                "request_id": entry.request_id,
                                "entry": entry.to_dict()})
+                self.audit.record("committed", request_id=entry.request_id,
+                                  batch_id=serve.batch.bid,
+                                  queue_wait_virtual_s=queue_wait)
+                if not entry.aborted:
+                    tr.metrics.counter("service.requests_served").inc()
+                    for c in entry.clients:
+                        tr.metrics.histogram("service.client_latency_s",
+                                             client=c).observe(latency)
 
     # ---------------------------------------------------------------- serve
     def serve(self, trace: Sequence[ServiceRequest],
@@ -603,6 +674,7 @@ class UnlearningService:
                          if service_request_id(r) not in committed]
                 replayed = [LedgerEntry.from_dict(d)
                             for d in committed.values()]
+        tr = get_tracer()
         batches = self.plan_schedule(trace)
         self.placement.reset_assignment()
         self.placement.reset_health()
@@ -616,11 +688,14 @@ class UnlearningService:
                                num_batches=len(batches))
         t0 = time.perf_counter()
         all_serves: List[_Serve] = []
-        for batch in batches:
-            serves = self._merge_groups(batch)
-            self._dispatch(serves, t0)
-            all_serves.extend(serves)
-        self._gather(all_serves, report, t0)
+        with tr.span("service.serve", requests=len(trace),
+                     batches=len(batches), resume=resume):
+            for batch in batches:
+                serves = self._merge_groups(batch)
+                self._dispatch(serves, t0)
+                all_serves.extend(serves)
+            with tr.span("service.gather"):
+                self._gather(all_serves, report, t0)
         report.serve_wall = time.perf_counter() - t0
         report.placement = self.placement.describe()   # incl. job counters
         report.entries.extend(replayed)          # journal-replayed commits
@@ -645,6 +720,9 @@ class UnlearningService:
         }
         if self.faults is not None:
             report.faults["ledger"] = self.faults.ledger.kinds()
+        # re-expose the serve's aggregates (incl. the per-client p99
+        # breakdown) through the metrics registry; idempotent gauges
+        tr.metrics.absorb_service_report(report)
         return report
 
     def _recovery_counters(self) -> dict:

@@ -86,6 +86,12 @@ class DevicePlacement:
         ``reassign`` (the retry path) avoids unhealthy devices."""
         with self._lock:
             self._unhealthy.add(index % len(self.devices))
+        from repro.telemetry import get_tracer
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("placement.unhealthy",
+                     device=index % len(self.devices))
+            tr.metrics.counter("placement.marked_unhealthy").inc()
 
     def reset_health(self) -> None:
         """Clear fault state — called at the top of every serve so each

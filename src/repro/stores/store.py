@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coding
+from repro.telemetry import get_tracer
 
 
 def tree_bytes(tree) -> int:
@@ -415,7 +416,8 @@ class CodedStore:
             layout.append((s, cs))
             specs.append(coding.StackedRowSpec(tuple(cs), row_len, row_spec))
         specs = tuple(specs)
-        with self._lock:
+        with self._lock, get_tracer().span("store.put_stage",
+                                           rounds=int(coded.shape[0])):
             for g in range(int(coded.shape[0])):
                 self._slices[g] = coded[g]
                 self._layouts[g] = layout
@@ -430,9 +432,11 @@ class CodedStore:
             rounds = [r for r, _ in self._pending]
             mats = [w for _, w in self._pending]
             self._pending = []
-            coded = coding.encode_batched(self.scheme, mats,
-                                          use_kernel=self.use_kernel,
-                                          out_dtype=self.slice_dtype)
+            with get_tracer().span("store.encode", rounds=len(rounds),
+                                   kernel=self.use_kernel):
+                coded = coding.encode_batched(self.scheme, mats,
+                                              use_kernel=self.use_kernel,
+                                              out_dtype=self.slice_dtype)
             for rnd, slices in zip(rounds, coded):
                 self._slices[rnd] = slices
                 self._account_stored(slices)
@@ -476,72 +480,79 @@ class CodedStore:
         accounting in ``StoreStats``; faults beyond eq. 11's budget raise
         ``coding.CodingBudgetExceeded``.
         """
-        with self._lock:
-            if rnd not in self._slices:
-                self.flush()                  # materialize deferred encodes
-            slices = self._slices[rnd]
-            layout = self._layouts[rnd]
-            specs = self._specs[rnd]
-            self.stats.reads += 1
-            self.stats.comm_bytes_retrieve += int(
-                self.scheme.num_shards * slices.shape[1]
-                * slices.dtype.itemsize)
-            self.stats.decode_flops += (2 * self.scheme.num_shards ** 2
-                                        * slices.shape[1])
-        # decode outside the lock: pure function of the slice tensor, so
-        # interleaved serves decode different shards concurrently
-        c = self.scheme.num_clients
-        plan = self.faults
-        inj_lost: list = []
-        inj_noise: dict = {}
-        if plan is not None:
-            host = np.asarray(jax.device_get(slices)).astype(np.float32)
-            inj_lost, inj_noise = plan.slice_faults(
-                rnd, self.scheme, int(slices.shape[1]),
-                scale_ref=float(np.abs(host).mean()))
-        if corrupt is None and available is None \
-                and not inj_lost and not inj_noise:
-            ids = list(range(c))
-            w = coding.decode_erasure(self.scheme, slices[jnp.asarray(ids)],
-                                      ids, use_kernel=self.use_kernel)
-        else:
-            if inj_noise:
-                rows = sorted(inj_noise)
-                noise = np.stack([inj_noise[r] for r in rows])
-                slices = slices.at[jnp.asarray(rows)].add(
-                    jnp.asarray(noise, slices.dtype))
-            if corrupt is not None:
-                slices = slices + jnp.asarray(corrupt, slices.dtype)
-            avail = set(available) if available is not None else set(range(c))
-            avail -= set(inj_lost)
-            # bf16 slices round-trip with ~4e-3 relative residual: scale the
-            # corruption-detection tolerance with the storage dtype
-            tol = 1e-3 if slices.dtype.itemsize >= 4 else 3e-2
-            try:
-                w, lost, bad = coding.decode_robust(
-                    self.scheme, slices, available=sorted(avail),
-                    use_kernel=self.use_kernel, tol=tol)
-            except coding.CodingBudgetExceeded:
-                with self._lock:
-                    self.stats.failed_reads += 1
-                raise
-            if lost or bad:
-                with self._lock:
-                    self.stats.recovered_reads += 1
-                    self.stats.erased_slices += len(lost)
-                    self.stats.corrupted_slices += len(bad)
-                if plan is not None:
-                    from repro.faults.events import RecoveryEvent
-                    plan.ledger.record(RecoveryEvent(
-                        "quorum_read", site=("round", rnd, "shard", shard),
-                        detail=(tuple(lost), tuple(bad))))
-        for idx, (s, cs) in enumerate(layout):
-            if s == shard:
-                spec = specs[idx]
-                if isinstance(spec, coding.StackedRowSpec):
-                    return coding.flat_to_client_trees(w[idx], spec)
-                return coding.flat_to_tree(w[idx], spec)
-        raise KeyError(f"shard {shard} not stored at round {rnd}")
+        with get_tracer().span("store.read", round=rnd, shard=shard) as sp:
+            with self._lock:
+                if rnd not in self._slices:
+                    self.flush()              # materialize deferred encodes
+                slices = self._slices[rnd]
+                layout = self._layouts[rnd]
+                specs = self._specs[rnd]
+                self.stats.reads += 1
+                self.stats.comm_bytes_retrieve += int(
+                    self.scheme.num_shards * slices.shape[1]
+                    * slices.dtype.itemsize)
+                self.stats.decode_flops += (2 * self.scheme.num_shards ** 2
+                                            * slices.shape[1])
+            # decode outside the lock: pure function of the slice tensor, so
+            # interleaved serves decode different shards concurrently
+            c = self.scheme.num_clients
+            plan = self.faults
+            inj_lost: list = []
+            inj_noise: dict = {}
+            if plan is not None:
+                host = np.asarray(jax.device_get(slices)).astype(np.float32)
+                inj_lost, inj_noise = plan.slice_faults(
+                    rnd, self.scheme, int(slices.shape[1]),
+                    scale_ref=float(np.abs(host).mean()))
+            if corrupt is None and available is None \
+                    and not inj_lost and not inj_noise:
+                ids = list(range(c))
+                w = coding.decode_erasure(self.scheme,
+                                          slices[jnp.asarray(ids)],
+                                          ids, use_kernel=self.use_kernel)
+            else:
+                if inj_noise:
+                    rows = sorted(inj_noise)
+                    noise = np.stack([inj_noise[r] for r in rows])
+                    slices = slices.at[jnp.asarray(rows)].add(
+                        jnp.asarray(noise, slices.dtype))
+                if corrupt is not None:
+                    slices = slices + jnp.asarray(corrupt, slices.dtype)
+                avail = (set(available) if available is not None
+                         else set(range(c)))
+                avail -= set(inj_lost)
+                # bf16 slices round-trip with ~4e-3 relative residual: scale
+                # the corruption-detection tolerance with the storage dtype
+                tol = 1e-3 if slices.dtype.itemsize >= 4 else 3e-2
+                try:
+                    w, lost, bad = coding.decode_robust(
+                        self.scheme, slices, available=sorted(avail),
+                        use_kernel=self.use_kernel, tol=tol)
+                except coding.CodingBudgetExceeded:
+                    with self._lock:
+                        self.stats.failed_reads += 1
+                    sp.annotate(failed=True)
+                    raise
+                if lost or bad:
+                    with self._lock:
+                        self.stats.recovered_reads += 1
+                        self.stats.erased_slices += len(lost)
+                        self.stats.corrupted_slices += len(bad)
+                    sp.annotate(recovered=True, erased=len(lost),
+                                corrupted=len(bad))
+                    if plan is not None:
+                        from repro.faults.events import RecoveryEvent
+                        plan.ledger.record(RecoveryEvent(
+                            "quorum_read",
+                            site=("round", rnd, "shard", shard),
+                            detail=(tuple(lost), tuple(bad))))
+            for idx, (s, cs) in enumerate(layout):
+                if s == shard:
+                    spec = specs[idx]
+                    if isinstance(spec, coding.StackedRowSpec):
+                        return coding.flat_to_client_trees(w[idx], spec)
+                    return coding.flat_to_tree(w[idx], spec)
+            raise KeyError(f"shard {shard} not stored at round {rnd}")
 
     def clients_at(self, rnd: int) -> List[int]:
         return sorted(c for _, cs in self._layouts[rnd] for c in cs)
