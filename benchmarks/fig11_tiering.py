@@ -1,0 +1,99 @@
+"""Fig. 11 (repo extension): the tiered store's storage-vs-decode-error
+frontier.
+
+Sweeps ``MemoryBudget`` points from all-hot (exact, max bytes) down to
+all-cold (int8 on disk, min RAM bytes) on identically seeded sessions, and
+measures at each point: resident bytes per tier, the SE-unlearn decode error
+against the exact ``CodedStore`` twin (global relative model distance), and
+the SE unlearn wall — the three axes of the frontier.  A second sweep holds
+the budget fixed at half-hot and swaps the eviction policy (LRU /
+stage-age / Zipf-aware heat).
+
+Every point's full ``SessionReport`` (with the per-tier ``StoreStats``
+counters) lands in ``BENCH_fig11.json`` via ``--json-dir``.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import (Scale, build_image_session, collect_report,
+                               emit)
+from repro.fl.experiment import UnlearnRequest
+
+
+def _victim(plan):
+    return [plan.shard_clients[0][0]]
+
+
+def _rel_err(ref_models, got_models) -> float:
+    """Global relative model distance over the impacted shards."""
+    diff, ref = [], []
+    for s in ref_models:
+        for x, y in zip(jax.tree.leaves(ref_models[s]),
+                        jax.tree.leaves(got_models[s])):
+            x = np.asarray(x, np.float64)
+            diff.append((x - np.asarray(y, np.float64)).ravel())
+            ref.append(x.ravel())
+    d, r = np.concatenate(diff), np.concatenate(ref)
+    return float(np.linalg.norm(d) / (np.linalg.norm(r) + 1e-12))
+
+
+def _run_point(sc, store: str, store_options=None):
+    session, _test = build_image_session(sc, iid=True, store=store,
+                                         store_options=store_options or {})
+    session.run_stage()
+    res = session.unlearn(UnlearnRequest(_victim, framework="SE"))[0]
+    return session, res
+
+
+def run(sc: Scale):
+    offload = tempfile.mkdtemp(prefix="fig11-")
+    # exact reference: the plain coded store ---------------------------------
+    ref_session, ref_res = _run_point(sc, "coded")
+    emit("fig11_coded_ref", 0.0,
+         f"server_bytes={ref_session.report.store_stats.server_bytes};"
+         f"unlearn_s={ref_res.wall_time:.3f}")
+
+    # budget frontier: all-hot → all-cold ------------------------------------
+    hot_total = None
+    points = [("unlimited", dict()),
+              ("hot_half", None),                    # resolved after unlimited
+              ("warm_only", dict(hot_bytes=0)),
+              ("cold_only", dict(hot_bytes=0, warm_bytes=0))]
+    for name, opts in points:
+        if opts is None:                             # hot_half needs hot_total
+            opts = dict(hot_bytes=hot_total // 2)
+        opts = dict(opts, offload_dir=offload)
+        session, res = _run_point(sc, "tiered", opts)
+        stats = session.report.store_stats
+        tb = stats.tier_bytes
+        if name == "unlimited":
+            hot_total = tb.get("hot", 0)
+        err = _rel_err(ref_res.models, res.models)
+        emit(f"fig11_{name}", 0.0,
+             f"hot_bytes={tb.get('hot', 0)};warm_bytes={tb.get('warm', 0)};"
+             f"cold_bytes={tb.get('cold', 0)};"
+             f"ram_bytes={tb.get('hot', 0) + tb.get('warm', 0)};"
+             f"decode_rel_err={err:.2e};unlearn_s={res.wall_time:.3f};"
+             f"hits={dict(stats.tier_hits)};"
+             f"evictions={dict(stats.tier_evictions)}")
+        collect_report(f"fig11_{name}", session.report)
+
+    # eviction-policy sweep at the half-hot pressure point -------------------
+    for policy in ("lru", "stage_age", "heat"):
+        opts = dict(hot_bytes=hot_total // 2, eviction=policy,
+                    offload_dir=offload)
+        session, res = _run_point(sc, "tiered", opts)
+        stats = session.report.store_stats
+        err = _rel_err(ref_res.models, res.models)
+        emit(f"fig11_evict_{policy}", 0.0,
+             f"decode_rel_err={err:.2e};unlearn_s={res.wall_time:.3f};"
+             f"evictions={dict(stats.tier_evictions)};"
+             f"promotions={dict(stats.tier_promotions)}")
+
+
+if __name__ == "__main__":
+    run(Scale())

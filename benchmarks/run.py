@@ -24,15 +24,16 @@ def main(argv=None) -> None:
     sys.path.insert(0, "src")
     from benchmarks import (fig3_single_request, fig4_concurrent, fig5_storage,
                             fig6_round_engine, fig7_service, fig8_faults,
-                            fig9_durability, fig10_telemetry, kernels_bench,
-                            table1_f1_time, theory_check, verify_bench)
+                            fig9_durability, fig10_telemetry, fig11_tiering,
+                            kernels_bench, table1_f1_time, theory_check,
+                            verify_bench)
     from benchmarks import common
     from benchmarks.common import Scale, emit
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig4,fig5,fig6,fig7,fig8,fig9,"
-                         "fig10,table1,verify,theory,kernels")
+                         "fig10,fig11,table1,verify,theory,kernels")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (100 clients, G=30, L=10) — slow on CPU")
     ap.add_argument("--fast", action="store_true",
@@ -65,6 +66,7 @@ def main(argv=None) -> None:
         "fig8": fig8_faults.run,
         "fig9": fig9_durability.run,
         "fig10": fig10_telemetry.run,
+        "fig11": fig11_tiering.run,
         "table1": table1_f1_time.run,
         "verify": verify_bench.run,
     }

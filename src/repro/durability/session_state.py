@@ -16,10 +16,16 @@ the durability acceptance test's whole premise.
 """
 from __future__ import annotations
 
+import os
+
+import jax.numpy as jnp
 import numpy as np
 
 from repro.stores.store import (CodedStore, FullStore, StoreStats,
                                 UncodedShardStore, _StackedRow)
+from repro.tiering.budget import MemoryBudget
+from repro.tiering.store import TieredStore
+from repro.tiering.tiers import TierEntry, cold_file_crc
 
 STATE_VERSION = 1
 
@@ -33,6 +39,43 @@ def _materialize(tree):
 # ---------------------------------------------------------------------------
 
 def _capture_store(store) -> dict:
+    if isinstance(store, TieredStore):      # before CodedStore: a subclass
+        store.flush()
+        entries = {}
+        for rnd, e in store._slices.entries().items():
+            ent = {"tier": e.tier, "hits": int(e.hits),
+                   "last_access": int(e.last_access), "stage": int(e.stage),
+                   "lossy": bool(e.lossy),
+                   "shape": (int(e.shape[0]), int(e.shape[1])),
+                   "dtype": np.dtype(e.dtype).name,
+                   "scales": e.scales,
+                   # cold pointer: basename + crc — the file itself is NOT
+                   # copied into the snapshot; resume revalidates it in place
+                   "path": (os.path.basename(e.path) if e.path else None),
+                   "file_crc": e.file_crc}
+            if e.tier == "hot":
+                ent["device"] = e.device
+            if e.q is not None and e.path is None:
+                ent["q"] = e.q              # RAM-only lossy payload
+            entries[rnd] = ent
+        return {"kind": "tiered",
+                "scheme": store.scheme,
+                "shard_clients": store.shard_clients,
+                "use_kernel": bool(store.use_kernel),
+                "slice_dtype": (np.dtype(store.slice_dtype).name
+                                if store.slice_dtype is not None else None),
+                "group_rounds": int(store.group_rounds),
+                "budget": store.budget.to_dict(),
+                "eviction": store.eviction,
+                "promote_on_read": bool(store.promote_on_read),
+                "offload_dir": store.offload_dir,
+                "cold_dir": store._cold_dir,
+                "seq": int(store._slices._seq),
+                "births": int(store._slices._births),
+                "entries": entries,
+                "specs": dict(store._specs),
+                "layouts": dict(store._layouts),
+                "stats": store.stats}
     if isinstance(store, CodedStore):
         store.flush()                       # materialize deferred encodes
         return {"kind": "coded",
@@ -59,11 +102,51 @@ def _capture_store(store) -> dict:
                 "shards": store._shards,
                 "stats": store.stats}
     raise TypeError(f"cannot capture store of type {type(store).__name__}; "
-                    f"durable sessions support full/uncoded/coded")
+                    f"durable sessions support full/uncoded/coded/tiered")
 
 
 def _restore_store(st: dict):
     kind = st["kind"]
+    if kind == "tiered":
+        dtype = np.dtype(st["slice_dtype"]) if st["slice_dtype"] else None
+        store = TieredStore(st["scheme"], st["shard_clients"],
+                            use_kernel=st["use_kernel"], slice_dtype=dtype,
+                            group_rounds=st["group_rounds"],
+                            budget=MemoryBudget(**st["budget"]),
+                            eviction=st["eviction"],
+                            offload_dir=st["offload_dir"],
+                            promote_on_read=st["promote_on_read"])
+        store._cold_dir = st["cold_dir"]
+        table = store._slices
+        for rnd, ent in st["entries"].items():
+            path = None
+            if ent["path"] is not None:
+                path = os.path.join(st["cold_dir"], ent["path"])
+                if not os.path.exists(path):
+                    raise FileNotFoundError(
+                        f"cold-tier file missing on resume: {path}")
+                if ent["file_crc"] is not None \
+                        and cold_file_crc(path) != ent["file_crc"]:
+                    raise IOError(f"cold-tier file corrupted: {path} "
+                                  f"(crc mismatch)")
+            scales = ent["scales"]
+            table._entries[rnd] = TierEntry(
+                key=rnd, shape=tuple(ent["shape"]),
+                dtype=jnp.dtype(ent["dtype"]), tier=ent["tier"],
+                device=ent.get("device"),
+                q=(np.asarray(ent["q"], np.int8).reshape(ent["shape"])
+                   if "q" in ent else None),
+                scales=(np.asarray(scales, np.float32)
+                        if scales is not None else None),
+                path=path, file_crc=ent["file_crc"], lossy=ent["lossy"],
+                hits=ent["hits"], last_access=ent["last_access"],
+                stage=ent["stage"])
+        table._seq = st["seq"]
+        table._births = st["births"]
+        store._specs = dict(st["specs"])
+        store._layouts = dict(st["layouts"])
+        store.stats = st["stats"]
+        return store
     if kind == "coded":
         dtype = np.dtype(st["slice_dtype"]) if st["slice_dtype"] else None
         store = CodedStore(st["scheme"], st["shard_clients"],

@@ -67,6 +67,12 @@ class FaultInjector:
         """row id -> additive corruption vector for round ``rnd``."""
         return {}
 
+    def cold_noise(self, plan: "FaultPlan", rnd: int, scheme,
+                   width: int, scale_ref: float) -> Dict[int, np.ndarray]:
+        """row id -> additive corruption for a round served from the
+        *cold* (disk-offloaded) tier of a tiered store."""
+        return {}
+
     def job_action(self, plan: "FaultPlan", key: Tuple, attempt: int,
                    device: int) -> Optional[Tuple[float, Optional[Exception]]]:
         """(delay_s, error-or-None) for one job attempt, or ``None``."""
@@ -174,6 +180,22 @@ class FaultPlan:
                     inj.name, site=("round", rnd),
                     detail=tuple(sorted(int(i) for i in nz))))
         return sorted(lost), noise
+
+    def cold_faults(self, rnd: int, scheme, width: int,
+                    scale_ref: float = 1.0) -> Dict[int, np.ndarray]:
+        """{row id: corruption vector} for one round *served from the cold
+        tier* of a tiered store.  Keyed on the round like ``slice_faults`` —
+        every cold read of the round observes the same corruption (it models
+        media rot on the offloaded file, not a flaky reader)."""
+        noise: Dict[int, np.ndarray] = {}
+        for inj in self.injectors:
+            nz = inj.cold_noise(self, rnd, scheme, width, scale_ref)
+            if nz:
+                noise.update(nz)
+                self.ledger.record(FaultEvent(
+                    inj.name, site=("cold", rnd),
+                    detail=tuple(sorted(int(i) for i in nz))))
+        return noise
 
     def job_action(self, key: Tuple, attempt: int,
                    device: int) -> Tuple[float, Optional[Exception]]:
@@ -351,6 +373,32 @@ class SliceCorruption(SliceErasure):
 
     def describe(self):
         return {**super().describe(), "scale": self.scale}
+
+
+@register_injector("cold_corrupt")
+class ColdCorruption(SliceCorruption):
+    """Corruption on *offloaded* slices: ``count`` rows of a round gain
+    additive noise only when the round is served from the cold
+    (disk-offloaded) tier of a tiered store — bit-rot on the cold medium.
+    Hot/warm serves of the same round are clean, so the injector exercises
+    the ``locate_errors``/RANSAC localization path precisely on the mmap'd
+    read-back.  Same ``count``/``scale``/``spare_quorum``/``rounds`` knobs
+    as ``slice_corruption``; seeded per ``("cold", round)`` site."""
+
+    def slice_noise(self, plan, rnd, scheme, width, scale_ref):
+        return {}
+
+    def cold_noise(self, plan, rnd, scheme, width, scale_ref):
+        if self.count <= 0 or (self.rounds is not None
+                               and rnd not in self.rounds):
+            return {}
+        rows = self._eligible(scheme)
+        rng = plan.rng(self.name, rnd)
+        k = min(self.count, len(rows))
+        picked = sorted(int(i) for i in
+                        rng.choice(rows, size=k, replace=False))
+        amp = self.scale * (abs(scale_ref) + 1e-8)
+        return {i: rng.standard_normal(width) * amp for i in picked}
 
 
 @register_injector("device_failure")

@@ -70,6 +70,9 @@ class ScenarioConfig:
     local_batch: Optional[int] = None
     # orchestration
     store: str = "coded"
+    # factory-specific store knobs passed through make_store verbatim (e.g.
+    # store="tiered": hot_bytes / warm_bytes / eviction / offload_dir)
+    store_options: Dict[str, Any] = field(default_factory=dict)
     engine: str = "fused"                # "stage" | "fused" | "legacy"
     encode_group: Optional[int] = None
     slice_dtype: Optional[DTypeLike] = None
@@ -218,7 +221,8 @@ def build_session(cfg: ScenarioConfig) -> Tuple[FederatedSession, TestData]:
                                batch_requests=cfg.batch_requests,
                                strict_schedule=cfg.strict_schedule,
                                checkpoint_every=cfg.checkpoint_every,
-                               checkpoint_dir=cfg.checkpoint_dir)
+                               checkpoint_dir=cfg.checkpoint_dir,
+                               store_options=cfg.store_options)
     return session, test
 
 

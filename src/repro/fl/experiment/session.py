@@ -161,7 +161,8 @@ class FederatedSession:
                  rounds: Optional[int] = None, batch_requests: bool = False,
                  strict_schedule: bool = False, faults=None,
                  checkpoint_every: int = 0,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 store_options: Optional[dict] = None):
         if checkpoint_every and not checkpoint_dir:
             raise ValueError(
                 f"checkpoint_every={checkpoint_every} needs a "
@@ -172,6 +173,7 @@ class FederatedSession:
                 f"snapshots), got {checkpoint_every}")
         self.sim = sim
         self.store_kind = store_kind
+        self.store_options = dict(store_options or {})
         self.engine = engine
         self.encode_group = encode_group
         self.slice_dtype = slice_dtype
@@ -210,7 +212,8 @@ class FederatedSession:
                                  engine=self.engine,
                                  encode_group=self.encode_group,
                                  slice_dtype=self.slice_dtype,
-                                 faults=self.faults)
+                                 faults=self.faults,
+                                 store_options=self.store_options)
         wall = time.perf_counter() - t0
         self.records.append(record)
         stats = record.store.stats.snapshot()

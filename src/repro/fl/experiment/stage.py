@@ -43,7 +43,7 @@ ENGINES = ("stage", "fused", "legacy")
 
 def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
                 engine: str = "fused", encode_group: Optional[int] = None,
-                slice_dtype=None, faults=None):
+                slice_dtype=None, faults=None, store_options=None):
     """One stage: sample clients, split into shards, G FedAvg rounds per
     shard, storing intermediate params in the requested (registered) store.
 
@@ -53,7 +53,8 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
     ``encode_group`` batches that many rounds per coded encode on the fused
     engine (default: all G in one; the stage engine always encodes all G
     inside the program).  ``slice_dtype`` optionally stores coded slices in
-    e.g. bf16.
+    e.g. bf16.  ``store_options`` passes factory-specific knobs through to
+    the registered store (e.g. ``store_kind="tiered"`` budgets/eviction).
 
     ``faults`` (a ``repro.faults.FaultPlan``) applies the plan's client
     dropout to the freshly sampled stage (clients vanish before training —
@@ -100,7 +101,8 @@ def train_stage(sim, store_kind: str = "coded", rounds: Optional[int] = None,
                     rounds=g_rounds, dropped=len(dropped))
         store = sim._make_store(store_kind, plan,
                                 group_rounds=encode_group or g_rounds,
-                                slice_dtype=slice_dtype)
+                                slice_dtype=slice_dtype,
+                                **(store_options or {}))
         if faults is not None and hasattr(store, "attach_faults"):
             store.attach_faults(faults)
         # the store's preferred payload form decides what the jitted round

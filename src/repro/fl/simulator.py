@@ -392,12 +392,15 @@ class FLSimulator:
         return jnp.asarray(xs), jnp.asarray(ys)
 
     def _make_store(self, store_kind: str, plan: StagePlan,
-                    group_rounds: int = 1, slice_dtype=None):
-        """Build a registered parameter store for one stage (``STORES``)."""
+                    group_rounds: int = 1, slice_dtype=None, **store_options):
+        """Build a registered parameter store for one stage (``STORES``).
+        ``store_options`` are factory-specific knobs passed through verbatim
+        (e.g. the tiered store's ``hot_bytes``/``eviction``)."""
         return make_store(store_kind, plan.shard_clients,
                           num_shards=self.fl.num_shards,
                           num_clients=self.fl.clients_per_round,
-                          group_rounds=group_rounds, slice_dtype=slice_dtype)
+                          group_rounds=group_rounds, slice_dtype=slice_dtype,
+                          **store_options)
 
     # --------------------------------------------------- deprecated shims
     def train_stage(self, store_kind: str = "coded",

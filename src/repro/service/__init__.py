@@ -26,6 +26,8 @@ from repro.service.policy import (POLICIES, BatchWindowPolicy,  # noqa: F401
                                   SchedulingPolicy, make_policy,
                                   register_policy)
 from repro.service.workload import (ServiceRequest, VirtualClock,  # noqa: F401
-                                    bursty_trace, client_sampler, load_trace,
-                                    poisson_trace, save_trace,
-                                    sequenced_trace, service_request_id)
+                                    bursty_trace, client_sampler,
+                                    iter_poisson_trace, iter_trace,
+                                    load_trace, poisson_trace, save_trace,
+                                    save_trace_jsonl, sequenced_trace,
+                                    service_request_id)

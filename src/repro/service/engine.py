@@ -403,11 +403,24 @@ class UnlearningService:
                 out.add((i, s))
         return frozenset(out)
 
-    def plan_schedule(self, trace: Sequence[ServiceRequest]) -> List[_Batch]:
+    def plan_schedule(self, trace) -> List[_Batch]:
         """The deterministic half: run the discrete-event loop over the
         trace and return the dispatch plan (who batches with whom, when).
-        Pure virtual time — no wall clock, no device work."""
-        arrivals = sorted(trace, key=lambda r: (r.t, r.rid))
+        Pure virtual time — no wall clock, no device work.
+
+        ``trace`` may be a materialized sequence (sorted here) or any
+        iterable/generator (ROADMAP item 3a streaming replay: requests are
+        admitted one at a time and never held as a list — the stream must
+        arrive in non-decreasing ``t`` order, which the seeded ``iter_*``
+        generators produce by construction).  Both forms plan, audit, and
+        serve bit-identically for the same requests."""
+        if isinstance(trace, Sequence):
+            return self._plan_materialized(sorted(
+                trace, key=lambda r: (r.t, r.rid)))
+        return self._plan_stream(iter(trace))
+
+    def _plan_materialized(self,
+                           arrivals: List[ServiceRequest]) -> List[_Batch]:
         clock = VirtualClock()
         tr = get_tracer()
         # spans opened from here on carry the deterministic virtual time of
@@ -446,13 +459,68 @@ class UnlearningService:
                                           list(queue)))
                     queue.clear()
             sp.annotate(batches=len(batches))
+        self._audit_scheduled(batches)
+        return batches
+
+    def _plan_stream(self, it) -> List[_Batch]:
+        """Streaming twin of ``_plan_materialized``: pulls one request ahead
+        of the clock, records its ``received`` audit at admission (same
+        sorted order the materialized path pre-records), and enforces the
+        monotone-arrival contract a stream cannot be re-sorted around."""
+        clock = VirtualClock()
+        tr = get_tracer()
+        tr.attach_clock(clock)
+        queue: List[Pending] = []
+        batches: List[_Batch] = []
+        nxt = next(it, None)
+        last_t = float("-inf")
+        n = 0
+        with tr.span("service.plan") as sp:
+            while nxt is not None or queue:
+                candidates = []
+                if nxt is not None:
+                    candidates.append(nxt.t)
+                t_policy = self.policy.next_event(queue, clock.now)
+                if t_policy is not None:
+                    candidates.append(t_policy)
+                final = not candidates
+                if candidates:
+                    clock.advance_to(min(candidates))
+                while nxt is not None and nxt.t <= clock.now:
+                    if nxt.t < last_t:
+                        raise ValueError(
+                            f"streamed trace is not time-ordered: request "
+                            f"{nxt.rid} arrives at t={nxt.t} after t="
+                            f"{last_t}; stream traces must be sorted "
+                            f"(materialize + sort, or generate in order)")
+                    last_t = nxt.t
+                    self.audit.record("received",
+                                      request_id=service_request_id(nxt),
+                                      clients=list(nxt.clients),
+                                      framework=nxt.framework,
+                                      t_virtual=nxt.t)
+                    queue.append(Pending(nxt,
+                                         impacted=self._impact_of(nxt)))
+                    n += 1
+                    nxt = next(it, None)
+                for group in self.policy.release(queue, clock.now,
+                                                 final=final):
+                    batches.append(_Batch(len(batches), clock.now, group))
+                if final and queue:
+                    batches.append(_Batch(len(batches), clock.now,
+                                          list(queue)))
+                    queue.clear()
+            sp.annotate(requests=n, batches=len(batches))
+        self._audit_scheduled(batches)
+        return batches
+
+    def _audit_scheduled(self, batches: List[_Batch]) -> None:
         for b in batches:
             for p in b.pendings:
                 self.audit.record(
                     "scheduled", request_id=service_request_id(p.req),
                     batch_id=b.bid, t_virtual=b.time,
                     shards=[list(x) for x in sorted(p.impacted)])
-        return batches
 
     # ------------------------------------------------------------- dispatch
     def _merge_groups(self, batch: _Batch) -> List[_Serve]:
@@ -648,12 +716,16 @@ class UnlearningService:
                                              client=c).observe(latency)
 
     # ---------------------------------------------------------------- serve
-    def serve(self, trace: Sequence[ServiceRequest],
-              resume: bool = False) -> ServiceReport:
+    def serve(self, trace, resume: bool = False) -> ServiceReport:
         """Serve the whole trace: plan the dispatch schedule (virtual,
         deterministic), dispatch every batch's shard programs across the
         placement without blocking, then gather completions into the
         ledger.  Returns the ``ServiceReport``.
+
+        ``trace`` is a sequence of ``ServiceRequest`` or any time-ordered
+        iterable/generator (``iter_poisson_trace`` / ``iter_trace``) — the
+        streaming form never materializes the request list and serves
+        bit-identically to the materialized trace for the same seed.
 
         With ``resume=True`` and a journal attached, requests whose
         ``svc_commit`` is already journaled are NOT re-dispatched — their
@@ -670,12 +742,20 @@ class UnlearningService:
                 if ev.get("ev") == "svc_commit":
                     committed[ev["request_id"]] = ev["entry"]
             if committed:
-                trace = [r for r in trace
-                         if service_request_id(r) not in committed]
+                if isinstance(trace, Sequence):
+                    trace = [r for r in trace
+                             if service_request_id(r) not in committed]
+                else:                       # keep a stream a stream
+                    trace = (r for r in trace
+                             if service_request_id(r) not in committed)
                 replayed = [LedgerEntry.from_dict(d)
                             for d in committed.values()]
         tr = get_tracer()
         batches = self.plan_schedule(trace)
+        # every admitted request lands in exactly one batch, so this equals
+        # len(trace) for materialized traces — and is the only way to count
+        # a streamed one
+        n_requests = sum(len(b.pendings) for b in batches)
         self.placement.reset_assignment()
         self.placement.reset_health()
         if self.faults is not None:
@@ -688,7 +768,7 @@ class UnlearningService:
                                num_batches=len(batches))
         t0 = time.perf_counter()
         all_serves: List[_Serve] = []
-        with tr.span("service.serve", requests=len(trace),
+        with tr.span("service.serve", requests=n_requests,
                      batches=len(batches), resume=resume):
             for batch in batches:
                 serves = self._merge_groups(batch)

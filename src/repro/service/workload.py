@@ -100,7 +100,8 @@ def client_sampler(pool: Sequence[int], seed: int, skew: float = 0.0,
         idx = rng.choice(len(order), size=k, replace=replace, p=probs)
         out = [int(order[i]) for i in idx]
         if not replace:
-            keep = [i for i in range(len(order)) if i not in set(idx.tolist())]
+            drawn = set(idx.tolist())      # hoisted: O(n), not O(n*k)
+            keep = [i for i in range(len(order)) if i not in drawn]
             order = [order[i] for i in keep]
             probs = probs[keep]
             if probs.sum() > 0:
@@ -127,21 +128,31 @@ class TraceConfig:
     pool: Sequence[int] = field(default_factory=list)   # victim pool
 
 
+def iter_poisson_trace(pool: Sequence[int], n: int, rate: float,
+                       seed: int = 0, **cfg_kw):
+    """Generator twin of ``poisson_trace``: yields the ``n`` requests one at
+    a time without materializing the trace list, so a 10⁵–10⁶-request
+    Zipf-skewed replay holds one request in memory at a time.  Identical RNG
+    consumption order to the list form — ``list(iter_poisson_trace(...))``
+    is element-for-element equal to ``poisson_trace(...)`` for the same
+    seed (asserted in ``tests/test_service.py``)."""
+    cfg = TraceConfig(pool=pool, **cfg_kw)
+    rng = np.random.default_rng(seed)
+    sample = client_sampler(cfg.pool, seed + 1, cfg.skew, cfg.replace)
+    t = 0.0
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        yield ServiceRequest(
+            t=t, clients=tuple(sample(cfg.victims_per_request)),
+            framework=cfg.framework, rounds=cfg.rounds,
+            deadline=cfg.deadline, apply=cfg.apply, rid=i)
+
+
 def poisson_trace(pool: Sequence[int], n: int, rate: float, seed: int = 0,
                   **cfg_kw) -> List[ServiceRequest]:
     """``n`` requests with Exponential(1/rate) inter-arrival times —
     memoryless arrivals at ``rate`` requests per virtual second."""
-    cfg = TraceConfig(pool=pool, **cfg_kw)
-    rng = np.random.default_rng(seed)
-    sample = client_sampler(cfg.pool, seed + 1, cfg.skew, cfg.replace)
-    t, out = 0.0, []
-    for i in range(n):
-        t += float(rng.exponential(1.0 / rate))
-        out.append(ServiceRequest(
-            t=t, clients=tuple(sample(cfg.victims_per_request)),
-            framework=cfg.framework, rounds=cfg.rounds,
-            deadline=cfg.deadline, apply=cfg.apply, rid=i))
-    return out
+    return list(iter_poisson_trace(pool, n, rate, seed=seed, **cfg_kw))
 
 
 def bursty_trace(pool: Sequence[int], n: int, burst_rate: float,
@@ -190,18 +201,59 @@ def save_trace(path: str, trace: Sequence[ServiceRequest]) -> None:
         json.dump({"requests": [r.to_dict() for r in trace]}, f, indent=2)
 
 
+def save_trace_jsonl(path: str, trace) -> int:
+    """Streaming trace writer: one JSON object per line, consuming ``trace``
+    (any iterable, including the ``iter_*`` generators) one request at a
+    time.  Returns the number of requests written."""
+    n = 0
+    with open(path, "w") as f:
+        for r in trace:
+            f.write(json.dumps(r.to_dict()) + "\n")
+            n += 1
+    return n
+
+
+def _request_from_dict(r: dict, i: int) -> ServiceRequest:
+    return ServiceRequest(t=float(r["t"]),
+                          clients=tuple(int(c) for c in r["clients"]),
+                          framework=r.get("framework", "SE"),
+                          rounds=r.get("rounds"),
+                          deadline=r.get("deadline"),
+                          apply=bool(r.get("apply", False)),
+                          rid=int(r.get("rid", i)),
+                          request_id=str(r.get("request_id", "")))
+
+
+def iter_trace(path: str):
+    """Streaming trace reader: yields requests line-by-line from a JSONL
+    trace (``save_trace_jsonl``) without materializing the list.  A legacy
+    ``save_trace`` JSON file (first line is not a complete request object —
+    either the root object spans lines or it carries the ``requests`` key)
+    transparently falls back to ``load_trace`` — still a generator, but
+    materialized underneath (the legacy format cannot be streamed)."""
+    with open(path) as f:
+        first = f.readline().strip()
+        legacy = False
+        if first:
+            try:
+                legacy = "requests" in json.loads(first)
+            except json.JSONDecodeError:
+                legacy = True              # root object spans multiple lines
+        if legacy:
+            yield from load_trace(path)
+            return
+        f.seek(0)
+        for i, line in enumerate(f):
+            line = line.strip()
+            if line:
+                yield _request_from_dict(json.loads(line), i)
+
+
 def load_trace(path: str) -> List[ServiceRequest]:
     """Trace-file replay: the JSON twin of ``save_trace`` (requests are
     re-sorted by arrival time; ties keep file order)."""
     with open(path) as f:
         payload = json.load(f)
-    reqs = [ServiceRequest(t=float(r["t"]),
-                           clients=tuple(int(c) for c in r["clients"]),
-                           framework=r.get("framework", "SE"),
-                           rounds=r.get("rounds"),
-                           deadline=r.get("deadline"),
-                           apply=bool(r.get("apply", False)),
-                           rid=int(r.get("rid", i)),
-                           request_id=str(r.get("request_id", "")))
+    reqs = [_request_from_dict(r, i)
             for i, r in enumerate(payload["requests"])]
     return sorted(reqs, key=lambda r: (r.t, r.rid))

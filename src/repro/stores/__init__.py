@@ -11,3 +11,7 @@ from repro.stores.store import (CodedStore, FullStore,  # noqa: F401
                                 ParameterStore, RoundPayload, STORES,
                                 StoreStats, UncodedShardStore, make_store,
                                 register_store, tree_bytes)
+
+# registration side-effect: makes store="tiered" resolvable everywhere the
+# STORES registry is consulted (ScenarioConfig, FLSimulator, benchmarks)
+import repro.tiering.store  # noqa: E402,F401

@@ -81,23 +81,41 @@ class StoreStats:
     erased_slices: int = 0        # unreachable slices tolerated across reads
     corrupted_slices: int = 0     # corrupted slices localized + excluded
     failed_reads: int = 0         # reads aborted: faults exceeded the budget
+    # tiered-store accounting (repro.tiering.TieredStore); keyed by tier name.
+    # tier_bytes is residency (bytes currently held in that tier's medium:
+    # device / host RAM / disk); the rest are monotone counters.
+    tier_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tier_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tier_misses: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tier_evictions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tier_promotions: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def merge(self, other: "StoreStats") -> "StoreStats":
         """Field-wise accumulate ``other`` into self (returns self) — the one
-        aggregation point for session/benchmark reporting."""
+        aggregation point for session/benchmark reporting.  Dict-valued
+        fields (the per-tier counters) accumulate key-wise."""
         for f in dataclasses.fields(self):
-            setattr(self, f.name,
-                    getattr(self, f.name) + getattr(other, f.name))
+            mine, theirs = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(mine, dict):
+                for k, v in theirs.items():
+                    mine[k] = mine.get(k, 0) + v
+            else:
+                setattr(self, f.name, mine + theirs)
         return self
 
     def __iadd__(self, other: "StoreStats") -> "StoreStats":
         return self.merge(other)
 
     def __add__(self, other: "StoreStats") -> "StoreStats":
-        return dataclasses.replace(self).merge(other)
+        return self.snapshot().merge(other)
 
     def snapshot(self) -> "StoreStats":
-        return dataclasses.replace(self)
+        out = dataclasses.replace(self)
+        for f in dataclasses.fields(out):     # don't alias the dict fields
+            v = getattr(out, f.name)
+            if isinstance(v, dict):
+                setattr(out, f.name, dict(v))
+        return out
 
     def to_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -456,6 +474,25 @@ class CodedStore:
         quorum-read recovery path."""
         self.faults = plan
 
+    def _injected_faults(self, rnd: int, slices: jnp.ndarray):
+        """Ask the attached ``FaultPlan`` (if any) for this round's slice
+        faults: ``(lost_ids, {row: noise})``.  Subclasses widen this — the
+        tiered store additionally exposes offloaded (cold-tier) slices to
+        ``cold_corrupt`` injectors."""
+        if self.faults is None:
+            return [], {}
+        host = np.asarray(jax.device_get(slices)).astype(np.float32)
+        return self.faults.slice_faults(
+            rnd, self.scheme, int(slices.shape[1]),
+            scale_ref=float(np.abs(host).mean()))
+
+    def _decode_tol(self, rnd: int, slices: jnp.ndarray) -> float:
+        """Corruption-detection tolerance for ``decode_robust``.  bf16 slices
+        round-trip with ~4e-3 relative residual, so the tolerance scales with
+        the storage dtype; the tiered store widens it further for rounds that
+        passed through the lossy int8 tier."""
+        return 1e-3 if slices.dtype.itemsize >= 4 else 3e-2
+
     def get(self, rnd: int, client: int):
         """Single-client retrieval decodes the client's shard and indexes it
         (the coded layout has no per-client granularity)."""
@@ -496,14 +533,7 @@ class CodedStore:
             # decode outside the lock: pure function of the slice tensor, so
             # interleaved serves decode different shards concurrently
             c = self.scheme.num_clients
-            plan = self.faults
-            inj_lost: list = []
-            inj_noise: dict = {}
-            if plan is not None:
-                host = np.asarray(jax.device_get(slices)).astype(np.float32)
-                inj_lost, inj_noise = plan.slice_faults(
-                    rnd, self.scheme, int(slices.shape[1]),
-                    scale_ref=float(np.abs(host).mean()))
+            inj_lost, inj_noise = self._injected_faults(rnd, slices)
             if corrupt is None and available is None \
                     and not inj_lost and not inj_noise:
                 ids = list(range(c))
@@ -521,9 +551,7 @@ class CodedStore:
                 avail = (set(available) if available is not None
                          else set(range(c)))
                 avail -= set(inj_lost)
-                # bf16 slices round-trip with ~4e-3 relative residual: scale
-                # the corruption-detection tolerance with the storage dtype
-                tol = 1e-3 if slices.dtype.itemsize >= 4 else 3e-2
+                tol = self._decode_tol(rnd, slices)
                 try:
                     w, lost, bad = coding.decode_robust(
                         self.scheme, slices, available=sorted(avail),
@@ -540,9 +568,9 @@ class CodedStore:
                         self.stats.corrupted_slices += len(bad)
                     sp.annotate(recovered=True, erased=len(lost),
                                 corrupted=len(bad))
-                    if plan is not None:
+                    if self.faults is not None:
                         from repro.faults.events import RecoveryEvent
-                        plan.ledger.record(RecoveryEvent(
+                        self.faults.ledger.record(RecoveryEvent(
                             "quorum_read",
                             site=("round", rnd, "shard", shard),
                             detail=(tuple(lost), tuple(bad))))

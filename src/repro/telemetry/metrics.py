@@ -140,9 +140,15 @@ class MetricsRegistry:
     # ------------------------------------------------------ absorb existing
     def absorb_store_stats(self, stats, **labels) -> None:
         """Re-expose a ``StoreStats`` snapshot as ``store.<field>`` gauges
-        (idempotent — absorbing the same snapshot twice is a no-op)."""
+        (idempotent — absorbing the same snapshot twice is a no-op).  The
+        per-tier dict fields of a tiered store fan out into one gauge per
+        tier label: ``store.tier_bytes{tier=warm}`` etc."""
         for field, value in stats.to_dict().items():
-            self.gauge(f"store.{field}", **labels).set(value)
+            if isinstance(value, dict):
+                for tier, v in value.items():
+                    self.gauge(f"store.{field}", tier=tier, **labels).set(v)
+            else:
+                self.gauge(f"store.{field}", **labels).set(value)
 
     def absorb_faults(self, faults: dict, **labels) -> None:
         """Re-expose a serve's fault/recovery counters (the ``faults`` dict

@@ -1,0 +1,25 @@
+"""Tiered coded parameter storage — hot / warm / cold under a memory budget.
+
+The paper's Fig. 5 storage claim measured one point (f32/bf16 coded slices,
+device-resident).  This subsystem turns it into a *frontier*: coded rounds
+demote through ``TIERS`` (hot device → warm host int8 → cold mmap'd disk)
+under a ``MemoryBudget`` with pluggable ``EVICTION`` policies, and
+``benchmarks/fig11_tiering.py`` measures storage-bytes × decode-error ×
+SE-unlearn-wall across budget sweeps.  ``TieredStore`` registers as
+``"tiered"`` in ``repro.stores.STORES`` — every scenario, framework, and the
+unlearning service run on it unchanged (``ScenarioConfig(store="tiered",
+store_options={...})``).
+"""
+from repro.tiering.budget import (EVICTION, UNLIMITED, MemoryBudget,
+                                  make_eviction, register_eviction)
+from repro.tiering.quant import (dequantize_int8, quant_error_bound,
+                                 quantize_int8)
+from repro.tiering.store import TierTable, TieredStore
+from repro.tiering.tiers import (TIER_ORDER, TIERS, TierEntry, register_tier)
+
+__all__ = [
+    "EVICTION", "MemoryBudget", "TIERS", "TIER_ORDER", "TierEntry",
+    "TierTable", "TieredStore", "UNLIMITED", "dequantize_int8",
+    "make_eviction", "quant_error_bound", "quantize_int8",
+    "register_eviction", "register_tier",
+]

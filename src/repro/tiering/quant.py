@@ -1,0 +1,64 @@
+"""int8 symmetric per-slice quantization — the warm/cold tier codec.
+
+A coded round is a ``(C, P)`` slice tensor (one Lagrange slice per client).
+Each *row* gets its own symmetric scale ``amax / 127`` so a hot client's
+large-magnitude slice cannot blow up the quantization error of its
+neighbours — the per-slice granularity mirrors how slices live on distinct
+clients in the paper's protocol.
+
+Determinism contract: once a round is quantized its ``(q, scales)`` payload
+is canonical.  Re-quantizing a *dequantized* tensor with the SAME stored
+scales reproduces ``q`` bit-exactly (the dequantized values sit within a few
+float32 ulps of the integer grid points, far inside the rint rounding
+window), which is what makes promote→demote→read bit-stable without keeping
+the int8 payload resident.  The tiered store therefore always passes the
+entry's stored ``scales`` back into :func:`quantize_int8` when it re-demotes
+a lossy round.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_int8(arr, scales: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize a ``(C, P)`` slice tensor to ``(q int8 (C, P), scales f32
+    (C,))`` with symmetric per-row scales ``amax / 127`` (zero rows get
+    scale 1.0 so dequantization is always well-defined).
+
+    Passing previously stored ``scales`` skips the amax recompute and makes
+    requantization of a dequantized tensor bit-exact (see module docstring).
+    """
+    a = np.asarray(jax.device_get(arr), dtype=np.float32)
+    if a.ndim != 2:
+        raise ValueError(f"expected a (C, P) slice tensor, got {a.shape}")
+    if scales is None:
+        amax = np.abs(a).max(axis=1)
+        scales = np.where(amax > 0.0, amax / 127.0, 1.0).astype(np.float32)
+    else:
+        scales = np.asarray(scales, dtype=np.float32)
+        if scales.shape != (a.shape[0],):
+            raise ValueError(f"scales shape {scales.shape} != ({a.shape[0]},)")
+    q = np.clip(np.rint(a / scales[:, None]), -127, 127).astype(np.int8)
+    return q, scales
+
+
+def dequantize_int8(q: np.ndarray, scales: np.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct the slice tensor on device in ``dtype`` (the tier's
+    original hot dtype, so downstream decode sees the shapes/dtypes it
+    always saw)."""
+    a = q.astype(np.float32) * np.asarray(scales, np.float32)[:, None]
+    return jnp.asarray(a, dtype=dtype)
+
+
+def quant_error_bound(scales: np.ndarray) -> float:
+    """Worst-case absolute reconstruction error per element: half a
+    quantization step of the widest row, plus a few float32 ulps of
+    headroom for the dequant multiply."""
+    smax = float(np.asarray(scales, np.float32).max())
+    return smax * (0.5 + 127 * float(np.finfo(np.float32).eps))

@@ -10,6 +10,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import jax
 import numpy as np
@@ -23,8 +24,10 @@ from repro.fl.experiment import (FederatedSession, RequestSchedule,
 from repro.service import (POLICIES, BatchWindowPolicy, FIFOPolicy, Pending,
                            SLAPolicy, ServiceRequest, UnlearningService,
                            VirtualClock, bursty_trace, client_sampler,
-                           load_trace, make_policy, poisson_trace, save_trace,
-                           sequenced_trace, single_device_placement)
+                           iter_poisson_trace, iter_trace, load_trace,
+                           make_policy, poisson_trace, save_trace,
+                           save_trace_jsonl, sequenced_trace,
+                           single_device_placement)
 
 FL_TINY = FLConfig(num_clients=10, clients_per_round=8, num_shards=2,
                    local_epochs=2, global_rounds=3, retrain_ratio=2.0)
@@ -112,6 +115,80 @@ class TestWorkload:
         assert clk.advance_to(1.0) == 2.0          # no time travel
         assert clk.advance(0.5) == 2.5
         assert clk.advance(-1.0) == 2.5
+
+    def test_sampler_large_pool_without_replacement_is_linear(self):
+        """Regression: the without-replacement filter used an O(n·k)
+        membership scan against the drawn-index *array*; on a 300k-client
+        pool it took minutes.  The hoisted-set form stays well under a
+        second per call."""
+        sample = client_sampler(range(300_000), seed=0, skew=1.0,
+                                replace=False)
+        t0 = time.perf_counter()
+        drawn = sample(500) + sample(500)
+        wall = time.perf_counter() - t0
+        assert len(set(drawn)) == 1000             # no duplicates across calls
+        assert wall < 5.0, f"sampler took {wall:.1f}s on a 300k pool"
+
+
+# ----------------------------------------------------------------- streaming
+class TestStreamingWorkload:
+    def test_iter_poisson_matches_materialized(self):
+        kw = dict(n=16, rate=4.0, seed=3, skew=1.0, victims_per_request=2)
+        gen = iter_poisson_trace(range(10), **kw)
+        assert next(gen).rid == 0                  # lazy: yields one at a time
+        assert [next(gen).rid for _ in range(15)] == list(range(1, 16))
+        assert list(iter_poisson_trace(range(10), **kw)) == \
+            poisson_trace(range(10), **kw)
+
+    def test_jsonl_roundtrip_streams(self, tmp_path):
+        trace = poisson_trace(range(6), n=5, rate=2.0, seed=1, deadline=3.0)
+        path = str(tmp_path / "trace.jsonl")
+        # writer consumes a generator without materializing it
+        assert save_trace_jsonl(path, iter(trace)) == 5
+        assert list(iter_trace(path)) == trace
+
+    def test_iter_trace_reads_legacy_json(self, tmp_path):
+        trace = poisson_trace(range(6), n=4, rate=2.0, seed=1)
+        path = str(tmp_path / "trace.json")
+        save_trace(path, trace)
+        assert list(iter_trace(path)) == trace
+
+
+class TestStreamingServe:
+    @pytest.fixture(scope="class")
+    def sessions(self):
+        """Two identically-seeded trained sessions: one serves the
+        materialized trace, one the generator form of the same trace."""
+        sess_a = FederatedSession(_tiny_sim(), store_kind="coded")
+        sess_b = FederatedSession(_tiny_sim(), store_kind="coded")
+        rec = sess_a.run_stage()
+        sess_b.run_stage()
+        victims = [rec.plan.shard_clients[0][0], rec.plan.shard_clients[1][0]]
+        return sess_a, sess_b, victims
+
+    def test_generator_serve_bit_identical_to_list(self, sessions):
+        sess_a, sess_b, victims = sessions
+        trace = sequenced_trace(victims, spacing=0.1, rounds=1)
+        svc = dict(policy="fifo", placement=single_device_placement())
+        rep_a = UnlearningService(sess_a, **svc).serve(list(trace))
+        rep_b = UnlearningService(sess_b, **svc).serve(iter(trace))
+        assert [e.rid for e in rep_a.entries] == [e.rid for e in rep_b.entries]
+        assert rep_a.num_batches == rep_b.num_batches
+        got_a = [u for st in sess_a.report.stages for u in st.unlearn]
+        got_b = [u for st in sess_b.report.stages for u in st.unlearn]
+        assert len(got_a) == len(got_b) == len(victims)
+        for ra, rb in zip(got_a, got_b):
+            assert ra.impacted_shards == rb.impacted_shards
+            assert ra.cost_units == rb.cost_units
+            for s in ra.models:
+                _trees_equal(ra.models[s], rb.models[s])
+
+    def test_non_monotone_stream_raises(self, sessions):
+        sess_a, _, victims = sessions
+        bad = iter([_req(0, 1.0, victims[:1]), _req(1, 0.5, victims[:1])])
+        with pytest.raises(ValueError, match="time-ordered"):
+            UnlearningService(
+                sess_a, placement=single_device_placement()).serve(bad)
 
 
 # ------------------------------------------------------------------ policies
